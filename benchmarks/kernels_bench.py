@@ -1,0 +1,42 @@
+"""Kernel-layer microbenchmarks (ops-level, CPU ref path): wall time per call
++ achieved bytes — the per-kernel harness the TPU run would use as-is."""
+import jax
+import jax.numpy as jnp
+
+from repro.graph.generators import rmat
+from repro.graph.structs import build_ell
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.segment_spmm.ops import segment_spmm
+
+from benchmarks.common import emit, timed
+
+
+def run():
+    key = jax.random.key(0)
+    # flash attention (blocked ref path — the production CPU fallback)
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    fn = jax.jit(lambda q, k, v: flash_attention(q, k, v, impl="ref"))
+    _, us = timed(lambda: fn(q, k, v).block_until_ready())
+    flops = 4 * 1024 * 1024 * 8 * 64 / 2  # causal
+    emit("kernel/flash_attention_1k", us, f"gflops_per_s={flops / us / 1e3:.1f}")
+
+    # segment spmm over the power-law ELL
+    g = rmat(4000, 60_000, seed=0)
+    ell = build_ell(g.reversed())
+    x = jax.random.normal(key, (4000, 128), jnp.float32)
+    fn2 = jax.jit(lambda x: segment_spmm(x, ell, impl="ref"))
+    _, us = timed(lambda: fn2(x).block_until_ready())
+    gbytes = 60_000 * 128 * 4 / 1e9
+    emit("kernel/segment_spmm_60k", us, f"fill={ell.fill_fraction():.2f};"
+         f"gather_GBps={gbytes / (us / 1e6):.1f}")
+
+    # embedding bag
+    tables = jax.random.normal(key, (26, 100_000, 16), jnp.float32)
+    ids = jax.random.randint(key, (4096, 26, 1), 0, 100_000)
+    fn3 = jax.jit(lambda t, i: embedding_bag(t, i, impl="ref"))
+    _, us = timed(lambda: fn3(tables, ids).block_until_ready())
+    emit("kernel/embedding_bag_4k", us,
+         f"lookups_per_s={4096 * 26 / (us / 1e6):.0f}")

@@ -1,0 +1,15 @@
+"""Benchmark runner — one section per paper figure/table.
+Prints ``name,us_per_call,derived`` CSV (assignment contract)."""
+import sys
+
+
+def main() -> None:
+    from benchmarks import data_movement, energy, hop_count, kernels_bench, skew, speedup
+
+    print("name,us_per_call,derived")
+    for mod in (skew, data_movement, hop_count, speedup, energy, kernels_bench):
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

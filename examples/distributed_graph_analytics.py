@@ -1,0 +1,51 @@
+"""Distributed graph analytics on a multi-device mesh (Level B of DESIGN.md):
+the paper's partitioning + placement driving a shard_map vertex-centric
+engine, with the measured all-to-all bytes shown for the paper scheme vs the
+random baseline.
+
+    PYTHONPATH=src python examples/distributed_graph_analytics.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.mapping import DeviceMapper
+from repro.core.partition import powerlaw_partition, random_partition
+from repro.graph.algorithms import pagerank_program, prepare_graph, reference_pagerank
+from repro.graph.distributed import DistributedEngine, make_engines_mesh
+from repro.graph.generators import rmat
+
+g = prepare_graph("pagerank", rmat(2_000, 32_000, seed=1, name="pods"))
+P = len(jax.devices())
+print(f"{P} engines (devices); graph |V|={g.num_nodes} |E|={g.num_edges}")
+
+# paper scheme: Algorithm 2 partition + DeviceMapper placement permutation
+mapper = DeviceMapper((2, P // 2))
+perm, part, h_opt, h_id = mapper.device_permutation(g.src, g.dst, g.num_nodes)
+print(f"ICI hop count (byte-weighted): identity {h_id:.2f} → optimized {h_opt:.2f}")
+
+mesh = make_engines_mesh(site_permutation=perm)
+engine = DistributedEngine(pagerank_program(), mesh)
+out, iters = engine.run(g, part, max_iterations=100)
+err = float(np.nanmax(np.abs(out - reference_pagerank(g))))
+print(f"pagerank: {iters} iterations, max |err| vs reference = {err:.2e}")
+
+# baseline: random partition (same engine) — compare exchanged bytes
+base_part = random_partition(g.src, g.dst, g.num_nodes, P)
+base_out, _ = engine.run(g, base_part, max_iterations=100)
+err_b = float(np.nanmax(np.abs(base_out - reference_pagerank(g))))
+print(f"random partition also converges (err {err_b:.2e}) — correctness is "
+      f"mapping-independent; the win is communication:")
+
+from repro.core.traffic import traffic_from_partition
+for name, p in (("powerlaw", part), ("random", base_part)):
+    t = traffic_from_partition(p, g.src, g.dst, model="cross")
+    cross = t.bytes_matrix.reshape(4, P, 4, P).sum((0, 2))
+    off = cross.sum() - np.trace(cross)
+    print(f"  {name:9s}: cross-device bytes/iter = {off/1e6:.2f} MB")

@@ -1,0 +1,47 @@
+"""Serving scenario: continuous batching over a fixed slot pool.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+
+Requests with mixed prompt lengths arrive; the engine admits them into free
+KV-cache slots, decodes one token per engine step for every active slot,
+and refills slots as requests finish — the static-shape serving pattern the
+decode_32k dry-run cells lower at production scale.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.launch.serve import build_engine
+from repro.models import transformer as tfm
+import jax
+
+arch = get_arch("llama3.2-3b")
+cfg = arch.smoke_config()
+params = tfm.init_params(cfg, jax.random.key(0))
+engine = build_engine(cfg, params, slots=4, max_seq=96)
+
+rng = np.random.default_rng(0)
+from repro.serve.engine import Request
+
+for i in range(10):
+    plen = int(rng.integers(4, 24))
+    engine.submit(Request(uid=i, prompt=rng.integers(2, cfg.vocab, plen).astype(np.int32),
+                          max_new_tokens=12))
+
+t0 = time.perf_counter()
+steps = 0
+while engine.queue or any(a is not None for a in engine.active):
+    live = engine.step()
+    steps += 1
+    if steps % 8 == 0:
+        print(f"step {steps:3d}: {live} active, {len(engine.queue)} queued, "
+              f"{len(engine.completed)} done")
+dt = time.perf_counter() - t0
+toks = sum(len(r.out_tokens) for r in engine.completed)
+print(f"\n{len(engine.completed)} requests, {toks} tokens, {dt:.1f}s "
+      f"({toks/dt:.1f} tok/s on 1 CPU core; slots never idle while queue non-empty)")

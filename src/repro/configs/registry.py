@@ -1,0 +1,31 @@
+"""--arch registry: maps arch ids to their Arch objects."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-34b": "granite_34b",
+    "llama3.2-3b": "llama3_2_3b",
+    "yi-34b": "yi_34b",
+    "gin-tu": "gin_tu",
+    "graphcast": "graphcast",
+    "gat-cora": "gat_cora",
+    "pna": "pna",
+    "dcn-v2": "dcn_v2",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_arch(arch_id: str):
+    try:
+        mod = _MODULES[arch_id]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}") from None
+    return importlib.import_module(f"repro.configs.{mod}").ARCH
+
+
+def all_arches():
+    return {a: get_arch(a) for a in ARCH_IDS}

@@ -1,0 +1,195 @@
+"""Network-on-chip topology models (paper §2.2/Fig. 1 and §5.3/Algorithm 4).
+
+Each topology exposes the hop-count metric Algorithm 4 minimises plus enough
+structure (links, bisection) for the trace-driven simulator.  `Torus3D` is the
+TPU-ICI adaptation: a pod's ICI fabric is a wrap-around torus, so placement of
+logical shards on physical chips is the same optimisation problem the paper
+solves for its 2-D mesh.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import itertools
+
+import numpy as np
+
+__all__ = ["Topology", "Mesh2D", "FlattenedButterfly", "Torus2D", "Torus3D", "topology_by_name"]
+
+
+class Topology(abc.ABC):
+    """A NoC topology: a set of router coordinates and a hop-count metric."""
+
+    name: str
+
+    @property
+    @abc.abstractmethod
+    def num_nodes(self) -> int: ...
+
+    @abc.abstractmethod
+    def coords(self) -> np.ndarray:
+        """(num_nodes, ndim) int array of router coordinates."""
+
+    @abc.abstractmethod
+    def distance_matrix(self) -> np.ndarray:
+        """(num_nodes, num_nodes) hop counts between routers."""
+
+    @abc.abstractmethod
+    def num_links(self) -> int:
+        """Unidirectional link count (for serialization-throughput modelling)."""
+
+    def distance(self, i: int, j: int) -> int:
+        return int(self.distance_matrix()[i, j])
+
+    def average_distance(self) -> float:
+        d = self.distance_matrix()
+        n = d.shape[0]
+        if n < 2:
+            return 0.0
+        return float(d.sum() / (n * (n - 1)))
+
+
+def _cached(fn):
+    attr = "_cache_" + fn.__name__
+
+    def wrapper(self):
+        val = getattr(self, attr, None)
+        if val is None:
+            val = fn(self)
+            object.__setattr__(self, attr, val)
+        return val
+
+    return wrapper
+
+
+@dataclasses.dataclass(frozen=True)
+class Mesh2D(Topology):
+    """k_x × k_y 2-D mesh; hop count = L1 distance (paper Alg. 4 line 5)."""
+
+    kx: int
+    ky: int
+    name: str = "mesh2d"
+
+    @property
+    def num_nodes(self) -> int:
+        return self.kx * self.ky
+
+    @_cached
+    def coords(self) -> np.ndarray:
+        return np.array(list(itertools.product(range(self.kx), range(self.ky))), dtype=np.int64)
+
+    @_cached
+    def distance_matrix(self) -> np.ndarray:
+        c = self.coords()
+        return np.abs(c[:, None, :] - c[None, :, :]).sum(-1)
+
+    def num_links(self) -> int:
+        return 2 * ((self.kx - 1) * self.ky + self.kx * (self.ky - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class FlattenedButterfly(Topology):
+    """Flattened butterfly: routers in the same row or column are directly
+    connected, so hop count = (#differing coordinates) ∈ {0, 1, 2}.
+
+    NOTE: the paper's Algorithm 4 line 6 prints the same L1 formula as the
+    mesh — a typo; the standard flattened-butterfly metric (Kim et al.,
+    ISCA'07) is one hop per differing dimension, which also matches the
+    paper's Fig. 7 observation that FB gains are smaller (1.8–1.9×) because
+    the baseline's routes are already short.
+    """
+
+    kx: int
+    ky: int
+    name: str = "fbutterfly"
+
+    @property
+    def num_nodes(self) -> int:
+        return self.kx * self.ky
+
+    @_cached
+    def coords(self) -> np.ndarray:
+        return np.array(list(itertools.product(range(self.kx), range(self.ky))), dtype=np.int64)
+
+    @_cached
+    def distance_matrix(self) -> np.ndarray:
+        c = self.coords()
+        return (c[:, None, :] != c[None, :, :]).sum(-1)
+
+    def num_links(self) -> int:
+        # Every row is a clique of ky routers; every column a clique of kx.
+        row_links = self.kx * (self.ky * (self.ky - 1))
+        col_links = self.ky * (self.kx * (self.kx - 1))
+        return row_links + col_links
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus2D(Topology):
+    """2-D torus (wrap-around mesh)."""
+
+    kx: int
+    ky: int
+    name: str = "torus2d"
+
+    @property
+    def num_nodes(self) -> int:
+        return self.kx * self.ky
+
+    @_cached
+    def coords(self) -> np.ndarray:
+        return np.array(list(itertools.product(range(self.kx), range(self.ky))), dtype=np.int64)
+
+    @_cached
+    def distance_matrix(self) -> np.ndarray:
+        c = self.coords()
+        diff = np.abs(c[:, None, :] - c[None, :, :])
+        dims = np.array([self.kx, self.ky])
+        return np.minimum(diff, dims - diff).sum(-1)
+
+    def num_links(self) -> int:
+        return 2 * 2 * self.num_nodes  # 2 dims × 2 directions × nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus3D(Topology):
+    """TPU-pod ICI fabric: 3-D wrap-around torus (e.g. v4 pod 16×16×(z))."""
+
+    kx: int
+    ky: int
+    kz: int
+    name: str = "torus3d"
+
+    @property
+    def num_nodes(self) -> int:
+        return self.kx * self.ky * self.kz
+
+    @_cached
+    def coords(self) -> np.ndarray:
+        return np.array(
+            list(itertools.product(range(self.kx), range(self.ky), range(self.kz))),
+            dtype=np.int64,
+        )
+
+    @_cached
+    def distance_matrix(self) -> np.ndarray:
+        c = self.coords()
+        diff = np.abs(c[:, None, :] - c[None, :, :])
+        dims = np.array([self.kx, self.ky, self.kz])
+        return np.minimum(diff, dims - diff).sum(-1)
+
+    def num_links(self) -> int:
+        return 3 * 2 * self.num_nodes
+
+
+def topology_by_name(name: str, *dims: int) -> Topology:
+    table = {
+        "mesh2d": Mesh2D,
+        "fbutterfly": FlattenedButterfly,
+        "torus2d": Torus2D,
+        "torus3d": Torus3D,
+    }
+    try:
+        cls = table[name]
+    except KeyError:
+        raise ValueError(f"unknown topology {name!r}; options: {sorted(table)}") from None
+    return cls(*dims)

@@ -1,0 +1,373 @@
+"""Shard placement onto NoC coordinates (paper §5.2 Algorithm 3, §5.3 Algorithm 4).
+
+The optimisation: assign each logical shard (structure, part) to a router so
+that the hop-weighted traffic  H = Σ_ij f_ij · dist(site_i, site_j)  is
+minimal.  This is a quadratic assignment problem; the paper calls it an ILP —
+we provide the standard linearised MILP (exact, small instances, via
+scipy/HiGHS), the paper's regular constructive layout (Algorithm 3 / Fig. 4),
+a traffic-weighted greedy + 2-opt for large meshes, a brute-force oracle for
+tests, and the randomized baseline the paper compares against (Fig. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.noc import FlattenedButterfly, Mesh2D, Topology
+from repro.core.partition import Partition
+from repro.core.traffic import EPROP, ET, VPROP, VTEMP, TrafficMatrix
+
+__all__ = [
+    "Placement",
+    "auto_mesh_for_parts",
+    "random_placement",
+    "columnar_placement",
+    "quad_placement",
+    "greedy_placement",
+    "two_opt",
+    "ilp_placement",
+    "brute_force_placement",
+    "place",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """site[n] = router index (into topology.coords()) of logical shard n."""
+
+    topology: Topology
+    site: np.ndarray  # (num_logical,) int
+    method: str
+
+    def __post_init__(self):
+        s = np.asarray(self.site)
+        if np.unique(s).size != s.size:
+            raise ValueError("placement assigns two shards to one router")
+        if s.size > self.topology.num_nodes:
+            raise ValueError("more shards than routers")
+
+    def weighted_hops(self, weights: np.ndarray) -> float:
+        """Σ_ij w_ij · dist(site_i, site_j) — Algorithm 4's objective H."""
+        d = self.topology.distance_matrix()
+        s = self.site
+        return float((weights * d[np.ix_(s, s)]).sum())
+
+    def average_hops(self, weights: np.ndarray) -> float:
+        total_w = float(weights.sum())
+        if total_w == 0:
+            return 0.0
+        return self.weighted_hops(weights) / total_w
+
+    def coords_of(self, logical: int) -> np.ndarray:
+        return self.topology.coords()[self.site[logical]]
+
+
+def auto_mesh_for_parts(num_parts: int, topology: str = "mesh2d") -> Topology:
+    """Smallest near-square mesh with ≥ 4·P routers (one per shard)."""
+    n = 4 * num_parts
+    kx = int(math.isqrt(n))
+    while n % kx:
+        kx -= 1
+    ky = n // kx
+    if kx == 1 and n > 2:  # prime 4P can't happen (4P divisible by 4) but guard
+        kx, ky = 2, (n + 1) // 2
+    cls = {"mesh2d": Mesh2D, "fbutterfly": FlattenedButterfly}[topology]
+    return cls(kx, ky)
+
+
+def random_placement(num_logical: int, topology: Topology, *, seed: int = 0) -> Placement:
+    """Paper baseline: randomized mapping of shards to routers (Fig. 5)."""
+    rng = np.random.default_rng(seed)
+    site = rng.permutation(topology.num_nodes)[:num_logical]
+    return Placement(topology, site, "random")
+
+
+def _site_lookup(topology: Topology) -> dict[tuple[int, ...], int]:
+    return {tuple(c): i for i, c in enumerate(topology.coords())}
+
+
+def columnar_placement(num_parts: int, topology: Topology) -> Placement:
+    """Algorithm 3's regular layout (paper Fig. 4): structures in rows.
+
+    Ranks occupy consecutive columns (x); structures occupy fixed rows (y):
+    ET on the top row band, eprop on the bottom band, vprop/vtemp in the
+    interior — satisfying the paper's constraints (index1: y high, index4:
+    y low, index2/3 interior).  Ranks wrap column-major when P > kx.
+    """
+    kx, ky = topology.kx, topology.ky  # type: ignore[attr-defined]
+    if kx * ky < 4 * num_parts:
+        raise ValueError("mesh too small")
+    bands = ky // 4
+    if bands == 0:
+        raise ValueError("columnar layout needs ky >= 4")
+    lookup = _site_lookup(topology)
+    site = np.empty(4 * num_parts, dtype=np.int64)
+    # Row bands bottom→top: eprop, vtemp, vprop, ET (transfer-heavy pairs
+    # (ET,vprop) and (eprop,vtemp) land in adjacent bands).
+    band_of = {EPROP: 0, VTEMP: 1, VPROP: 2, ET: 3}
+    for p in range(num_parts):
+        x = p % kx
+        sub = p // kx  # row inside the band when P > kx
+        if sub >= bands:
+            raise ValueError("mesh too small for columnar layout")
+        for struct, band in band_of.items():
+            y = band * bands + sub
+            site[struct * num_parts + p] = lookup[(x, y)]
+    return Placement(topology, site, "columnar")
+
+
+def quad_placement(num_parts: int, topology: Topology) -> Placement:
+    """Each rank's four shards in a 2×2 quad, quads tiled in snake order.
+
+    On a 2-D mesh every communicating pair sits at L1 distance 1, which is the
+    information-theoretic floor (distinct routers) — this is what the ILP
+    converges to and is our default constructive optimum.
+    """
+    kx, ky = topology.kx, topology.ky  # type: ignore[attr-defined]
+    if kx * ky < 4 * num_parts or kx < 2 or ky < 2:
+        raise ValueError("mesh too small")
+    qx, qy = kx // 2, ky // 2
+    if qx * qy < num_parts:
+        raise ValueError("not enough 2x2 quads")
+    lookup = _site_lookup(topology)
+    site = np.empty(4 * num_parts, dtype=np.int64)
+    # ET adjacent to vprop and vtemp; eprop adjacent to vprop and vtemp.
+    offset = {ET: (0, 0), VPROP: (0, 1), VTEMP: (1, 0), EPROP: (1, 1)}
+    for p in range(num_parts):
+        gx, gy = p % qx, p // qx
+        if gy % 2 == 1:  # snake rows keep consecutive ranks adjacent
+            gx = qx - 1 - gx
+        for struct, (dx, dy) in offset.items():
+            site[struct * num_parts + p] = lookup[(2 * gx + dx, 2 * gy + dy)]
+    return Placement(topology, site, "quad")
+
+
+def greedy_placement(weights: np.ndarray, topology: Topology, *, seed: int = 0) -> Placement:
+    """Traffic-weighted greedy: place shards in order of connectivity to the
+    already-placed set, each at the router minimising added weighted hops.
+    Scales to thousands of shards (vectorised over candidate routers).
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    w = w + w.T
+    n = w.shape[0]
+    d = topology.distance_matrix().astype(np.float64)
+    num_sites = topology.num_nodes
+    placed_site = np.full(n, -1, dtype=np.int64)
+    free = np.ones(num_sites, dtype=bool)
+    # accumulated cost-to-placed for every (node, site): updated incrementally.
+    cost = np.zeros((n, num_sites), dtype=np.float64)
+    placed_mask = np.zeros(n, dtype=bool)
+    # Seed: the heaviest shard at the mesh centroid.
+    first = int(w.sum(1).argmax())
+    center = int(d.sum(1).argmin())
+    order_rng = np.random.default_rng(seed)
+    cur, cur_site = first, center
+    for _ in range(n):
+        placed_site[cur] = cur_site
+        placed_mask[cur] = True
+        free[cur_site] = False
+        cost += np.outer(w[:, cur], d[cur_site])
+        if placed_mask.all():
+            break
+        conn = w[:, placed_mask].sum(1)
+        conn[placed_mask] = -np.inf
+        nxt = int(conn.argmax())
+        if not np.isfinite(conn[nxt]) or conn[nxt] <= 0:
+            unplaced = np.nonzero(~placed_mask)[0]
+            nxt = int(order_rng.choice(unplaced))
+        c = cost[nxt].copy()
+        c[~free] = np.inf
+        cur, cur_site = nxt, int(c.argmin())
+    return Placement(topology, placed_site, "greedy")
+
+
+def two_opt(
+    placement: Placement,
+    weights: np.ndarray,
+    *,
+    iters: int = 2000,
+    seed: int = 0,
+    include_free_sites: bool = True,
+) -> Placement:
+    """Pairwise-swap hill climbing on H; also tries moves into free routers."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = w + w.T
+    np.fill_diagonal(w, 0.0)
+    d = placement.topology.distance_matrix().astype(np.float64)
+    site = placement.site.copy()
+    n = site.size
+    rng = np.random.default_rng(seed)
+    occupied = np.zeros(placement.topology.num_nodes, dtype=np.int64) - 1
+    occupied[site] = np.arange(n)
+
+    def node_cost(i: int, s: int) -> float:
+        return float(w[i] @ d[s, site])
+
+    for _ in range(iters):
+        i = int(rng.integers(n))
+        if include_free_sites and rng.random() < 0.5:
+            t = int(rng.integers(placement.topology.num_nodes))
+            if occupied[t] >= 0:
+                continue
+            if node_cost(i, t) < node_cost(i, site[i]):
+                occupied[site[i]] = -1
+                occupied[t] = i
+                site[i] = t
+        else:
+            j = int(rng.integers(n))
+            if i == j:
+                continue
+            si, sj = site[i], site[j]
+            # node_cost against the *stale* site array omits the i-j cross term
+            # after the swap (d[s,s]=0); both sides carry +w_ij·d_ij once the
+            # 2·w_ij·d_ij correction is added to `after`, so the test is exact
+            # (the i-j distance itself is swap-invariant).
+            before = node_cost(i, si) + node_cost(j, sj)
+            after = node_cost(i, sj) + node_cost(j, si) + 2.0 * w[i, j] * d[si, sj]
+            if after < before:
+                site[i], site[j] = sj, si
+                occupied[si], occupied[sj] = j, i
+    return Placement(placement.topology, site, placement.method + "+2opt")
+
+
+def ilp_placement(
+    weights: np.ndarray,
+    topology: Topology,
+    *,
+    time_limit: float = 60.0,
+    max_logical: int = 24,
+) -> Placement:
+    """Algorithm 4 as an exact linearised MILP (HiGHS via scipy.optimize.milp).
+
+    Variables: x[n,s] ∈ {0,1} assignment; y[k,s,t] ∈ [0,1] for every traffic
+    pair k=(n,m), linearised with y ≥ x[n,s] + x[m,t] − 1.  Minimising
+    Σ_k w_k Σ_st d(s,t)·y keeps y at the max(0, ·) envelope, so the relaxation
+    of y is exact at binary x.  Practical to ~24 shards; larger instances
+    should use greedy_placement + two_opt (the paper's regularity constraints
+    make those near-optimal — validated against this ILP in tests).
+    """
+    from scipy import optimize, sparse
+
+    w = np.asarray(weights, dtype=np.float64)
+    w = np.triu(w + w.T, k=1)
+    n = w.shape[0]
+    if n > max_logical:
+        raise ValueError(f"ILP capped at {max_logical} shards (got {n}); use greedy+2opt")
+    S = topology.num_nodes
+    d = topology.distance_matrix().astype(np.float64)
+    pairs = [(i, j, w[i, j]) for i in range(n) for j in range(i + 1, n) if w[i, j] > 0]
+    K = len(pairs)
+    nx = n * S
+    ny = K * S * S
+    # objective
+    c = np.zeros(nx + ny)
+    for k, (_, _, wk) in enumerate(pairs):
+        c[nx + k * S * S : nx + (k + 1) * S * S] = wk * d.reshape(-1)
+    rows, cols, vals, lo, hi = [], [], [], [], []
+    r = 0
+    # each shard on exactly one router
+    for i in range(n):
+        for s in range(S):
+            rows.append(r), cols.append(i * S + s), vals.append(1.0)
+        lo.append(1.0), hi.append(1.0)
+        r += 1
+    # each router holds at most one shard
+    for s in range(S):
+        for i in range(n):
+            rows.append(r), cols.append(i * S + s), vals.append(1.0)
+        lo.append(0.0), hi.append(1.0)
+        r += 1
+    # linearisation y_kst >= x_is + x_jt - 1  ⇔  x_is + x_jt - y_kst <= 1
+    for k, (i, j, _) in enumerate(pairs):
+        for s in range(S):
+            for t in range(S):
+                yidx = nx + k * S * S + s * S + t
+                rows += [r, r, r]
+                cols += [i * S + s, j * S + t, yidx]
+                vals += [1.0, 1.0, -1.0]
+                lo.append(-np.inf), hi.append(1.0)
+                r += 1
+    A = sparse.csc_matrix((vals, (rows, cols)), shape=(r, nx + ny))
+    constraints = optimize.LinearConstraint(A, np.array(lo), np.array(hi))
+    integrality = np.concatenate([np.ones(nx), np.zeros(ny)])
+    bounds = optimize.Bounds(np.zeros(nx + ny), np.ones(nx + ny))
+    res = optimize.milp(
+        c,
+        constraints=constraints,
+        integrality=integrality,
+        bounds=bounds,
+        options={"time_limit": time_limit, "presolve": True},
+    )
+    if res.x is None:
+        raise RuntimeError(f"MILP failed: {res.message}")
+    x = res.x[:nx].reshape(n, S)
+    site = x.argmax(1).astype(np.int64)
+    return Placement(topology, site, "ilp")
+
+
+def brute_force_placement(weights: np.ndarray, topology: Topology) -> Placement:
+    """Exact search over all assignments — test oracle for tiny instances."""
+    import itertools
+
+    w = np.asarray(weights, dtype=np.float64)
+    w = w + w.T
+    n = w.shape[0]
+    if topology.num_nodes > 9 or n > 9:
+        raise ValueError("brute force limited to 9 routers")
+    d = topology.distance_matrix().astype(np.float64)
+    best, best_site = np.inf, None
+    for perm in itertools.permutations(range(topology.num_nodes), n):
+        s = np.array(perm)
+        cost = float((w * d[np.ix_(s, s)]).sum())
+        if cost < best:
+            best, best_site = cost, s
+    return Placement(topology, best_site, "brute")
+
+
+def place(
+    traffic: TrafficMatrix,
+    partition: Partition,
+    topology: Topology,
+    *,
+    method: str = "auto",
+    paper_faithful_fij: bool = False,
+    seed: int = 0,
+) -> Placement:
+    """One-call placement front-end.
+
+    paper_faithful_fij=True optimises the paper's binary equal-rank f_ij;
+    False (default) optimises measured traffic bytes (our extension).
+    method: auto | random | columnar | quad | greedy | ilp.
+    """
+    weights = traffic.binary_fij(partition) if paper_faithful_fij else traffic.bytes_matrix
+    n = traffic.num_logical
+    if method == "auto":
+        if n <= 16 and topology.num_nodes <= 16:
+            method = "ilp"
+        elif isinstance(topology, (Mesh2D, FlattenedButterfly)) and _quad_fits(
+            traffic.num_parts, topology
+        ):
+            method = "quad"
+        else:
+            method = "greedy"
+    if method == "random":
+        return random_placement(n, topology, seed=seed)
+    if method == "columnar":
+        return columnar_placement(traffic.num_parts, topology)
+    if method == "quad":
+        return two_opt(quad_placement(traffic.num_parts, topology), weights, iters=500, seed=seed)
+    if method == "greedy":
+        return two_opt(greedy_placement(weights, topology, seed=seed), weights, seed=seed)
+    if method == "ilp":
+        return ilp_placement(weights, topology)
+    raise ValueError(f"unknown placement method {method!r}")
+
+
+def _quad_fits(num_parts: int, topology: Topology) -> bool:
+    try:
+        kx, ky = topology.kx, topology.ky  # type: ignore[attr-defined]
+    except AttributeError:
+        return False
+    return kx >= 2 and ky >= 2 and (kx // 2) * (ky // 2) >= num_parts

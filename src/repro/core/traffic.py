@@ -1,0 +1,166 @@
+"""Traffic-matrix extraction (paper §4 Fig. 3 and the f_ij of Algorithms 3/4).
+
+The four in-memory structures are, per the paper's data flow (§2.3/§4):
+
+  Process phase : ET[part(e)]      → vprop[part(dst)]   (neighbour lookup)
+                  vprop[part(dst)] → eprop[part(e)]     (property value back)
+  Reduce phase  : eprop[part(e)]   → vtemp[part(dst)]   (temp update)
+                  ET[part(e)]      → vtemp[part(dst)]   (neighbour read)
+  Apply phase   : vtemp[part(v)]   → vprop[part(v)]     (local, negligible)
+
+Each logical shard (structure, part) is a node in the topology-mapping
+problem; `bytes_matrix` carries the measured bytes between shards so the
+placement can be solved either with the paper's binary f_ij (equal-rank
+pairs, Algorithm 3) or traffic-weighted (our beyond-paper variant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import Partition
+
+__all__ = ["STRUCTS", "ET", "VPROP", "VTEMP", "EPROP", "TrafficMatrix", "traffic_from_partition"]
+
+# Structure indices; order matches the paper's index field 1..4.
+STRUCTS = ("et", "vprop", "vtemp", "eprop")
+ET, VPROP, VTEMP, EPROP = range(4)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMatrix:
+    """Bytes moved between the 4×P logical shards of one execution."""
+
+    num_parts: int
+    bytes_matrix: np.ndarray  # (4P, 4P) float64 bytes
+    phase_bytes: dict[str, float]  # process/reduce/apply totals (Fig. 3)
+
+    @property
+    def num_logical(self) -> int:
+        return 4 * self.num_parts
+
+    def logical_id(self, struct: int, part: int) -> int:
+        return struct * self.num_parts + part
+
+    def struct_of(self, logical: int) -> int:
+        return logical // self.num_parts
+
+    def part_of(self, logical: int) -> int:
+        return logical % self.num_parts
+
+    def total_bytes(self) -> float:
+        return float(self.bytes_matrix.sum())
+
+    def symmetrized(self) -> np.ndarray:
+        m = self.bytes_matrix
+        return m + m.T
+
+    def binary_fij(self, partition: Partition) -> np.ndarray:
+        """The paper's Algorithm 3 adjacency: f_ij = 1 iff equal rank and
+        one endpoint is a {ET, eprop} shard, the other a {vprop, vtemp} shard.
+
+        With one rank per part (our Partition construction) "equal rank"
+        reduces to "equal part", giving the 4 pairs per part the paper draws
+        in Fig. 4.
+        """
+        n = self.num_logical
+        f = np.zeros((n, n), dtype=np.float64)
+        for p in range(self.num_parts):
+            for a in (ET, EPROP):
+                for b in (VPROP, VTEMP):
+                    i = self.logical_id(a, p)
+                    j = self.logical_id(b, p)
+                    f[i, j] = f[j, i] = 1.0
+        return f
+
+    def normalized_by(self, denom_bytes: float) -> dict[str, float]:
+        """Phase bytes normalised by the graph size (paper Fig. 3 y-axis)."""
+        return {k: v / denom_bytes for k, v in self.phase_bytes.items()}
+
+
+def _accumulate(matrix: np.ndarray, from_ids: np.ndarray, to_ids: np.ndarray, w: np.ndarray) -> None:
+    n = matrix.shape[0]
+    flat = from_ids.astype(np.int64) * n + to_ids.astype(np.int64)
+    matrix.reshape(-1)[:] += np.bincount(flat, weights=w, minlength=n * n)
+
+
+def traffic_from_partition(
+    partition: Partition,
+    src: np.ndarray,
+    dst: np.ndarray,
+    *,
+    edge_activity: np.ndarray | None = None,
+    vertex_activity: np.ndarray | None = None,
+    packet_bytes: int = 8,
+    model: str = "paper",
+) -> TrafficMatrix:
+    """Build the shard-to-shard traffic matrix for one algorithm execution.
+
+    edge_activity[e]   = number of iterations edge e carried a message
+                         (1.0 everywhere ≡ one full sweep, e.g. one PR iter).
+    vertex_activity[v] = number of iterations vertex v was applied.
+
+    model="paper"  — the paper's communication structure (Algorithm 3's
+        f_ij): each engine's four structure shards exchange the phase flows
+        *within the rank*.  Source-cut partitioning makes the Process reads
+        rank-local by construction (edge (u,v) lives with u's vprop); the
+        Reduce delivery is rank-local under GRAM-style duplicated-vtemp
+        book-keeping, which the paper adopts (§4 notes the extra traffic of
+        parallel-reduce book-keeping separately).  This is the model behind
+        Figs. 5/7/8 and what `benchmarks/` reproduces.
+    model="cross"  — Reduce delivery routed to the *destination vertex's*
+        part (no vtemp duplication).  Adds the data-dependent all-to-all
+        component; used by the Level-B DeviceMapper and by hub-replication
+        accounting (DESIGN.md §2).
+    """
+    if model not in ("paper", "cross"):
+        raise ValueError(f"unknown traffic model {model!r}")
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    P = partition.num_parts
+    n = 4 * P
+    if edge_activity is None:
+        edge_activity = np.ones(src.size, dtype=np.float64)
+    if vertex_activity is None:
+        vertex_activity = np.ones(partition.num_nodes, dtype=np.float64)
+    w = np.asarray(edge_activity, dtype=np.float64) * packet_bytes
+
+    ep = partition.edge_part.astype(np.int64)  # part of the edge (source-cut)
+    sp = partition.vertex_part[src].astype(np.int64)  # part of the src vertex
+    dp = partition.vertex_part[dst].astype(np.int64)  # part of the dst vertex
+
+    matrix = np.zeros((n, n), dtype=np.float64)
+    et_ids = ET * P + ep
+    eprop_ids = EPROP * P + ep
+    # Process reads the *source* property (Table 1: eProp = u.Prop ⊕ edge);
+    # source-cut ⇒ part(u) == part(e) except for capacity-spilled edges.
+    vprop_read_ids = VPROP * P + sp
+    # Reduce delivers to the destination's temp: rank-local under the paper's
+    # duplicated-vtemp model, destination part under the cross model.
+    vtemp_ids = VTEMP * P + (ep if model == "paper" else dp)
+
+    # Process: ET→vprop lookup, vprop→eprop value.
+    _accumulate(matrix, et_ids, vprop_read_ids, w)
+    _accumulate(matrix, vprop_read_ids, eprop_ids, w)
+    process_bytes = 2.0 * w.sum()
+    # Reduce: eprop→vtemp update, ET→vtemp neighbour read.
+    _accumulate(matrix, eprop_ids, vtemp_ids, w)
+    _accumulate(matrix, et_ids, vtemp_ids, w)
+    reduce_bytes = 2.0 * w.sum()
+    # Apply: vtemp→vprop, local per active vertex (same part → zero/short hops
+    # after co-placement, but the bytes still exist and are reported, Fig. 3).
+    wv = np.asarray(vertex_activity, dtype=np.float64) * packet_bytes
+    vpart = partition.vertex_part.astype(np.int64)
+    _accumulate(matrix, VTEMP * P + vpart, VPROP * P + vpart, wv)
+    apply_bytes = float(wv.sum())
+
+    return TrafficMatrix(
+        num_parts=P,
+        bytes_matrix=matrix,
+        phase_bytes={
+            "process": float(process_bytes),
+            "reduce": float(reduce_bytes),
+            "apply": apply_bytes,
+        },
+    )

@@ -1,0 +1,84 @@
+"""Pallas TPU EmbeddingBag: scalar-prefetched row gather + bag reduction.
+
+The TPU adaptation of the paper's CAM lookup: instead of a content search,
+the bag indices are *scalar-prefetched into SMEM* so the table BlockSpec's
+index_map can name the exact HBM row each grid step needs — Pallas then
+DMAs only those rows into VMEM (one (1, D) tile per step).  No full-table
+gather ever materialises; HBM traffic is exactly `Σ bag lengths × D` rows,
+which is the data-movement floor for the lookup.
+
+Grid (B, T, L): the bag dimension is innermost so the accumulator scratch
+carries across L steps of one (b, t) bag; the output tile is written on the
+last step.  D should be a multiple of 128 for lane alignment (tables with
+D=16 — dcn-v2 — are padded by ops.py and sliced back; the pad is free in
+interpret mode and one lane-masked store on real hardware).
+
+Production note: SMEM is ~1 MB/core, so real deployments tile B into grid-
+sized chunks before the call (ops.py handles this with `max_prefetch_rows`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag_pallas"]
+
+
+def _bag_kernel(ids_ref, table_ref, w_ref, o_ref, acc_ref, *, vocab: int, bag_len: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = ids_ref[b, t, l]
+    valid = (idx >= 0) & (idx < vocab)
+    w = w_ref[0, 0, l] * valid.astype(jnp.float32)
+    acc_ref[...] += table_ref[0, 0].astype(jnp.float32) * w
+
+    @pl.when(l == bag_len - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(
+    tables: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """tables (T, V, D); ids (B, T, L); weights (B, T, L) → (B, T, D)."""
+    t, v, d = tables.shape
+    b, t2, l = ids.shape
+    assert t == t2
+    if weights is None:
+        weights = jnp.ones((b, t, l), jnp.float32)
+    kernel = functools.partial(_bag_kernel, vocab=v, bag_len=l)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # ids live in SMEM, visible to index_maps
+        grid=(b, t, l),
+        in_specs=[
+            # table row chosen by the prefetched id — the indexed-DMA gather
+            pl.BlockSpec(
+                (1, 1, d),
+                lambda b_, t_, l_, ids_ref: (t_, jnp.clip(ids_ref[b_, t_, l_], 0, v - 1), 0),
+            ),
+            pl.BlockSpec((1, 1, l), lambda b_, t_, l_, ids_ref: (b_, t_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, t_, l_, ids_ref: (b_, t_, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, d), tables.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), tables, weights.astype(jnp.float32))

@@ -1,0 +1,74 @@
+"""Dispatching wrapper for EmbeddingBag: Pallas on TPU, jnp oracle elsewhere.
+
+Differentiable w.r.t. `tables` via a custom VJP whose backward pass is the
+scatter-add transpose (jnp — the forward kernel is the hot path; embedding
+grads are inherently scatter-shaped and XLA's sorted-scatter is fine)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _bag(tables, ids, weights, impl):
+    if impl == "pallas":
+        from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+        return embedding_bag_pallas(tables, ids, weights, interpret=not _on_tpu())
+    return embedding_bag_ref(tables, ids, weights)
+
+
+def _bag_fwd(tables, ids, weights, impl):
+    return _bag(tables, ids, weights, impl), (tables, ids, weights)
+
+
+def _bag_bwd(impl, res, g):
+    tables, ids, weights = res
+    t, v, d = tables.shape
+    valid = (ids >= 0) & (ids < v)
+    safe = jnp.clip(ids, 0, v - 1)
+    w = valid.astype(g.dtype)
+    if weights is not None:
+        w = w * weights.astype(g.dtype)
+    # d tables[t, i] += Σ_{b,l: ids[b,t,l]==i} w · g[b, t]
+    contrib = g[:, :, None, :] * w[..., None]  # (B, T, L, D)
+    flat_idx = (jnp.arange(t)[None, :, None] * v + safe)
+    flat_idx = jnp.broadcast_to(flat_idx, ids.shape).reshape(-1)
+    dtab = (
+        jnp.zeros((t * v, d), g.dtype).at[flat_idx].add(contrib.reshape(-1, d)).reshape(t, v, d)
+    )
+    dw = None
+    if weights is not None:
+        rows = tables[jnp.arange(t)[None, :, None], safe].astype(g.dtype)  # (B,T,L,D)
+        dw = (rows * g[:, :, None, :]).sum(-1) * valid.astype(g.dtype)
+    return dtab.astype(tables.dtype), None, dw
+
+
+_bag.defvjp(_bag_fwd, _bag_bwd)
+
+
+def embedding_bag(
+    tables: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """tables (T, V, D); ids (B, T, L) (out-of-range ⇒ pad); weights (B, T, L).
+    Returns (B, T, D) weighted bag sums."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    return _bag(tables, ids, weights, impl)

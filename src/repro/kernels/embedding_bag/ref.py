@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for EmbeddingBag: gather + masked weighted sum.
+
+tables (T, V, D); ids (B, T, L) int32 — entries outside [0, V) are padding;
+weights optional (B, T, L).  Output (B, T, D) = Σ_l w·tables[t, ids[b,t,l]].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(tables: jnp.ndarray, ids: jnp.ndarray,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    t, v, d = tables.shape
+    b, t2, l = ids.shape
+    assert t == t2, (t, t2)
+    valid = (ids >= 0) & (ids < v)
+    safe = jnp.clip(ids, 0, v - 1)
+    # (B, T, L, D) gather per table
+    rows = tables[jnp.arange(t)[None, :, None], safe]
+    w = valid.astype(tables.dtype)
+    if weights is not None:
+        w = w * weights.astype(tables.dtype)
+    return (rows * w[..., None]).sum(axis=2)

@@ -1,0 +1,66 @@
+"""Dispatching wrapper: Pallas TPU kernel when available, blocked-jnp otherwise.
+
+`flash_attention` is the single entry point the models call.  Selection:
+  impl="auto"   → pallas on TPU backends, blocked reference elsewhere
+  impl="pallas" → force the Pallas kernel (interpret=True off-TPU)
+  impl="ref"    → force the blocked jnp reference
+  impl="naive"  → unblocked reference (tests/small shapes only)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import flash_attention_ref, naive_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "impl", "block_q", "block_k", "skip_masked_blocks",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    kv_valid_len: jnp.ndarray | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "naive":
+        return naive_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
+        )
+    if impl == "pallas":
+        from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v,
+            causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len,
+            block_q=block_q, block_k=block_k,
+            interpret=not _on_tpu(),
+        )
+    return flash_attention_ref(
+        q, k, v,
+        causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        block_q=block_q, block_k=block_k, skip_masked_blocks=skip_masked_blocks,
+    )

@@ -1,0 +1,137 @@
+"""Pure-jnp oracle for the flash-attention kernel: blocked online softmax.
+
+Also the production long-sequence attention path on non-TPU backends and in
+the dry-run (XLA materialises full score matrices for naive attention, which
+is impossible at 32k context; this reference keeps peak memory at
+O(block_q × block_k) per head while remaining pure jnp).
+
+Numerics: fp32 accumulation, −1e30 masking (−inf would NaN the running-max
+correction on fully-masked blocks).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "naive_attention_ref"]
+
+NEG_INF = -1e30
+
+
+def naive_attention_ref(q, k, v, *, causal=True, q_offset=0, kv_valid_len=None):
+    """Unblocked oracle (small shapes only) — delegates to layers.gqa_attention."""
+    from repro.models.layers import gqa_attention
+
+    return gqa_attention(q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    kv_valid_len: jnp.ndarray | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    """GQA flash attention, blocked in both q and kv.
+
+    q: (B, Sq, Hq, dh);  k/v: (B, Skv, Hkv, dh), Hq = G·Hkv.
+    q_offset: absolute position of q[0] (prefill chunk offset / decode pos).
+    kv_valid_len: (B,) valid cache length mask (decode).
+    skip_masked_blocks: causal block skipping — computes only kv blocks at or
+      below each q block's diagonal (beyond-paper perf lever; unrolls the q
+      loop into per-block scans of exactly the needed length).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    nq = -(-sq // bq)
+    nk = -(-skv // bk)
+    sq_pad, skv_pad = nq * bq, nk * bk
+    qf = (q.astype(jnp.float32) / math.sqrt(dh)).reshape(b, sq, hkv, g, dh)
+    if sq_pad != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0), (0, 0)))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if skv_pad != skv:
+        kf = jnp.pad(kf, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    # (B, Hkv, G, nq, bq, dh) / (B, Hkv, nk, bk, dh)
+    qf = qf.transpose(0, 2, 3, 1, 4).reshape(b, hkv, g, nq, bq, dh)
+    kf = kf.transpose(0, 2, 1, 3).reshape(b, hkv, nk, bk, dh)
+    vf = vf.transpose(0, 2, 1, 3).reshape(b, hkv, nk, bk, dh)
+
+    kpos = jnp.arange(skv_pad).reshape(nk, bk)
+    kv_ok = kpos < skv  # padding mask
+    if kv_valid_len is not None:
+        kv_ok_b = kpos[None] < kv_valid_len[:, None, None]  # (B, nk, bk)
+    else:
+        kv_ok_b = jnp.broadcast_to(kv_ok[None], (b, nk, bk))
+
+    def q_block(qi):
+        qb = qf[:, :, :, qi]  # (B, Hkv, G, bq, dh)
+        qpos = qi * bq + jnp.arange(bq) + q_offset  # (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb = kf[:, :, ki], vf[:, :, ki]  # (B, Hkv, bk, dh)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb)
+            ok = kv_ok_b[:, ki][:, None, None, None, :]  # (B,1,1,1,bk)
+            if causal:
+                cm = (kpos[ki][None, :] <= qpos[:, None])[None, None, None]
+                ok = ok & cm
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = corr * l + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if skip_masked_blocks and causal and kv_valid_len is None and sq == skv and q_offset == 0:
+        # unrolled q loop: q block qi needs kv blocks [0, ceil(((qi+1)·bq)/bk))
+        outs = []
+        for qi in range(nq):
+            qb = qf[:, :, :, qi]
+            qpos = qi * bq + jnp.arange(bq)
+            hi = min(((qi + 1) * bq + bk - 1) // bk, nk)
+
+            def kv_step(carry, ki, qb=qb, qpos=qpos):
+                m, l, acc = carry
+                kb, vb = kf[:, :, ki], vf[:, :, ki]
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb)
+                ok = kv_ok_b[:, ki][:, None, None, None, :]
+                cm = (kpos[ki][None, :] <= qpos[:, None])[None, None, None]
+                s = jnp.where(ok & cm, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(-1))
+                corr = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                return (m_new, corr * l + p.sum(-1),
+                        acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)), None
+
+            m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+            a0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(hi))
+            outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        out = jnp.stack(outs, axis=3)  # (B, Hkv, G, nq, bq, dh)
+    else:
+        out = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, Hkv, G, bq, dh)
+        out = jnp.moveaxis(out, 0, 3)
+    out = out.reshape(b, hkv, g, sq_pad, dh)[:, :, :, :sq]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)

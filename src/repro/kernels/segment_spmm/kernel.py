@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for one degree-binned ELL bucket of the SpMM hot loop.
+
+This is the paper's CAM-search re-thought for TPU (DESIGN.md §7): the
+power-law degree sort that the paper uses for *placement* doubles as the
+layout transformation that makes the sparse gather dense-ish.  After
+Algorithm 2's sort, rows with similar degree share a bucket of fixed width
+W, so the kernel sees a regular (R × W) neighbour grid:
+
+  grid (R, W) — neighbour slot j innermost.  The *scalar-prefetched* column
+  ids let the x BlockSpec's index_map name the exact HBM row to DMA for
+  step (i, j); the (1, D) accumulator scratch carries the row's partial sum
+  across the W steps and the output row is written once at j = W-1.
+
+HBM traffic = (#valid edges + padding) × D — the ELL fill fraction (≈0.8 on
+power-law graphs after the degree sort, measured by EllBlocks.fill_fraction)
+is the only overhead over the information-theoretic gather floor.
+
+D should be lane-aligned (×128); ops.py pads narrow feature dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ell_spmm_pallas"]
+
+
+def _spmm_kernel(cols_ref, x_ref, w_ref, o_ref, acc_ref, *, num_nodes: int, width: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    col = cols_ref[i, j]
+    valid = col < num_nodes
+    w = w_ref[0, j] * valid.astype(jnp.float32)
+    acc_ref[...] += x_ref[0].astype(jnp.float32) * w
+
+    @pl.when(j == width - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_spmm_pallas(
+    x: jnp.ndarray,
+    cols: jnp.ndarray,
+    wts: jnp.ndarray | None = None,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (N, D); cols (R, W) int32 (≥N ⇒ pad); wts (R, W) → (R, D)."""
+    n, d = x.shape
+    r, w = cols.shape
+    if wts is None:
+        wts = jnp.ones((r, w), jnp.float32)
+    kernel = functools.partial(_spmm_kernel, num_nodes=n, width=w)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # cols in SMEM, visible to the x index_map
+        grid=(r, w),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, cols_ref: (jnp.minimum(cols_ref[i, j], n - 1), 0)),
+            pl.BlockSpec((1, w), lambda i, j, cols_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, cols_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(cols.astype(jnp.int32), x, wts.astype(jnp.float32))

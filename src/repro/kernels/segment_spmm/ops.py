@@ -1,0 +1,48 @@
+"""Dispatching wrapper: whole-graph SpMM through the degree-binned ELL path.
+
+`segment_spmm(x, ell)` runs every ELL bucket through the Pallas kernel (or
+the jnp oracle off-TPU) and scatters bucket outputs back to vertex order —
+the result equals `coo_spmm_ref` over the original edge list.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import EllBlocks
+from repro.kernels.segment_spmm.ref import ell_spmm_ref
+
+__all__ = ["segment_spmm", "ell_spmm"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def ell_spmm(x, cols, wts=None, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        from repro.kernels.segment_spmm.kernel import ell_spmm_pallas
+
+        return ell_spmm_pallas(x, cols, wts, interpret=not _on_tpu())
+    return ell_spmm_ref(x, cols, wts)
+
+
+def segment_spmm(x: jnp.ndarray, ell: EllBlocks, *, impl: str = "auto") -> jnp.ndarray:
+    """x (N, D) → (N, D): out[v] = Σ_{(u→v)∈E} w·x[u] using the reversed-graph
+    ELL (bucket rows are destination vertices, cols their in-neighbours)."""
+    n, d = x.shape
+    out = jnp.zeros((n + 1, d), x.dtype)  # +1 sentinel row for padded rows
+    for b in range(ell.num_buckets):
+        cols = ell.cols[b]
+        if cols.shape[0] == 0:
+            continue
+        wts = ell.weights[b] if ell.weights is not None else None
+        part = ell_spmm(x, cols, wts, impl=impl)
+        rows = jnp.minimum(ell.rows[b], n)  # padded rows → sentinel
+        out = out.at[rows].add(part)
+    return out[:n]

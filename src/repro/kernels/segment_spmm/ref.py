@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the degree-binned ELL SpMM (the Process/Reduce hot
+loop: gather source properties → edge compute → segment-reduce at dst).
+
+Two views of the same computation:
+  * `ell_spmm_ref(x, cols, wts)` — one ELL bucket: for each ELL row i,
+    out[i] = Σ_j wts[i,j] · x[cols[i,j]]  (cols ≥ N ⇒ padding).
+  * `coo_spmm_ref(x, src, dst, w, n)` — arbitrary COO edge list via
+    `jax.ops.segment_sum` (the whole-graph oracle the ELL path must match
+    after scatter-back).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmm_ref", "coo_spmm_ref"]
+
+
+def ell_spmm_ref(x: jnp.ndarray, cols: jnp.ndarray,
+                 wts: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x (N, D); cols (R, W) with entries ≥ N ⇒ pad → (R, D)."""
+    n = x.shape[0]
+    valid = cols < n
+    safe = jnp.minimum(cols, n - 1)
+    rows = x[safe]  # (R, W, D)
+    w = valid.astype(x.dtype)
+    if wts is not None:
+        w = w * wts.astype(x.dtype)
+    return (rows * w[..., None]).sum(axis=1)
+
+
+def coo_spmm_ref(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                 w: jnp.ndarray | None, num_nodes: int) -> jnp.ndarray:
+    """Σ_{e: dst[e]=v} w_e · x[src[e]] with sentinel (== num_nodes) padding."""
+    valid = (src < num_nodes) & (dst < num_nodes)
+    safe_src = jnp.minimum(src, num_nodes - 1)
+    msg = x[safe_src]
+    ww = valid.astype(x.dtype)
+    if w is not None:
+        ww = ww * w.astype(x.dtype)
+    msg = msg * ww[:, None]
+    return jax.ops.segment_sum(msg, jnp.minimum(dst, num_nodes), num_segments=num_nodes + 1)[
+        :num_nodes
+    ]

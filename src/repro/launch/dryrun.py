@@ -1,0 +1,163 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The XLA_FLAGS lines below are the FIRST statements — before any other
+import, jax included, since jax locks the device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single           # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+      # the full sweep (both meshes), one json per cell
+
+A cell passes when `.lower().compile()` succeeds; the compiled artifact's
+memory_analysis / cost_analysis and the HLO-parsed collective bytes are the
+§Dry-run / §Roofline record.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.launch.roofline import analyze_compiled, raw_costs
+
+
+def _scan_corrected_costs(arch, cell, mesh, *, multi_pod: bool,
+                          cfg_transform=None) -> dict:
+    """XLA cost_analysis counts a scan body once regardless of trip count
+    (verified — EXPERIMENTS.md §Calibration).  Correct by compiling the same
+    cell UNROLLED at depth 1 and 2: per-layer cost = c2 − c1, full cost =
+    c1 + (L−1)·(c2 − c1).  Collective bytes get the same treatment (the
+    while body's collectives also print once)."""
+    kw = dict(multi_pod=multi_pod, scan_layers=False)
+    if cfg_transform is not None:
+        kw["cfg_transform"] = cfg_transform
+    c = {}
+    for L in (1, 2):
+        case = arch.dryrun_case(cell, mesh, n_layers=L, **kw)
+        c[L] = raw_costs(case.lower(mesh).compile())
+    L_full = arch.n_layers
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = max(c[2][k] - c[1][k], 0.0)
+        out[k] = c[1][k] + (L_full - 1) * per_layer
+    bd = {}
+    for key in set(c[1]["coll_breakdown"]) | set(c[2]["coll_breakdown"]):
+        b1 = c[1]["coll_breakdown"].get(key, 0.0)
+        b2 = c[2]["coll_breakdown"].get(key, 0.0)
+        bd[key] = b1 + (L_full - 1) * max(b2 - b1, 0.0)
+    out["coll_breakdown"] = bd
+    return out
+
+
+def run_cell(arch_id: str, cell: str, *, multi_pod: bool, verbose: bool = True,
+             cfg_transform=None) -> dict:
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh_devices(mesh)
+    t0 = time.perf_counter()
+    kw = {"cfg_transform": cfg_transform} if cfg_transform is not None else {}
+    case = arch.dryrun_case(cell, mesh, multi_pod=multi_pod, **kw)
+    lowered = case.lower(mesh)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    costs = None
+    if arch.family == "lm":  # scanned over layers → needs the unroll correction
+        costs = _scan_corrected_costs(arch, cell, mesh, multi_pod=multi_pod,
+                                      cfg_transform=cfg_transform)
+    roof = analyze_compiled(case, lowered, compiled, mesh_name, chips, costs=costs)
+    rec = roof.to_dict()
+    rec.update(
+        {
+            "status": "ok",
+            "parser_v2": True,  # ring-factor collective accounting
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "raw_costs_scan_body_once": raw_costs(compiled) if costs else None,
+            "note": case.note,
+        }
+    )
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch_id} × {cell} × {mesh_name}] OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory_analysis: {ma}")
+        print(f"  flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+              f"coll={rec['coll_bytes']:.3e} dominant={rec['dominant']} "
+              f"roofline_frac={rec['roofline_fraction']:.3f}")
+    return rec
+
+
+def sweep(arch_ids, *, out_dir: str | None, meshes=("single", "multi"),
+          resume: bool = True) -> list[dict]:
+    records = []
+    for arch_id in arch_ids:
+        arch = get_arch(arch_id)
+        for cell in arch.shape_cells():
+            for mesh_kind in meshes:
+                multi = mesh_kind == "multi"
+                key = f"{arch_id}__{cell}__{'2x16x16' if multi else '16x16'}"
+                if resume and out_dir and os.path.exists(os.path.join(out_dir, key + ".json")):
+                    with open(os.path.join(out_dir, key + ".json")) as f:
+                        rec = json.load(f)
+                    if rec.get("status") == "ok":
+                        records.append(rec)
+                        print(f"[{key}] cached")
+                        continue
+                try:
+                    rec = run_cell(arch_id, cell, multi_pod=multi)
+                except Exception as e:  # a failing cell is a bug — record it loudly
+                    rec = {
+                        "arch": arch_id, "cell": cell,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[{key}] FAIL: {rec['error']}")
+                records.append(rec)
+                if out_dir:
+                    os.makedirs(out_dir, exist_ok=True)
+                    with open(os.path.join(out_dir, key + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1)
+        for cell, reason in arch.skipped_cells().items():
+            records.append({"arch": arch_id, "cell": cell, "status": "SKIP", "reason": reason})
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        recs = sweep(ARCH_IDS, out_dir=args.out, meshes=meshes)
+        ok = sum(r["status"] == "ok" for r in recs)
+        fail = sum(r["status"] == "FAIL" for r in recs)
+        skip = sum(r["status"] == "SKIP" for r in recs)
+        print(f"\nDRY-RUN SWEEP: {ok} ok / {fail} fail / {skip} skipped")
+        raise SystemExit(1 if fail else 0)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required unless --all")
+    for mesh_kind in meshes:
+        rec = run_cell(args.arch, args.shape, multi_pod=mesh_kind == "multi")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            key = f"{args.arch}__{args.shape}__{rec['mesh']}"
+            with open(os.path.join(args.out, key + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

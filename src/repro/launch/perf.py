@@ -1,0 +1,186 @@
+"""§Perf hillclimb driver: lower/compile one cell under a named variant and
+report the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-3b \
+        --shape train_4k --variant fsdp --out artifacts/perf
+
+Variants are named cfg transforms registered in VARIANTS — each is one
+hypothesis→change iteration from EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+
+def _replace_rules(cfg, **kw):
+    return dataclasses.replace(cfg, rules=dataclasses.replace(cfg.rules, **kw))
+
+
+def v_fsdp(cfg):
+    """ZeRO-3 instead of TP+SP: params over flat ("data","model"), batch over
+    everything, zero TP collectives (dense LMs only)."""
+    return _replace_rules(cfg, strategy="fsdp")
+
+
+def v_fsdp_bf16params(cfg):
+    """fsdp + bf16 parameter storage (fp32 master stays in the optimizer —
+    the train-step adamw keeps fp32 mu/nu and upcasts)."""
+    import jax.numpy as jnp
+
+    return dataclasses.replace(_replace_rules(cfg, strategy="fsdp"),
+                               param_dtype=jnp.bfloat16)
+
+
+def v_bf16params(cfg):
+    import jax.numpy as jnp
+
+    return dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+
+
+def v_no_remat(cfg):
+    return dataclasses.replace(cfg, remat=False)
+
+
+def v_block_skip(cfg):
+    """Causal block skipping in the blocked attention path."""
+    return dataclasses.replace(cfg, attn_skip_masked_blocks=True)
+
+
+def v_fsdp_skip(cfg):
+    return v_block_skip(v_fsdp(cfg))
+
+
+def v_fsdp_bf16_skip(cfg):
+    return v_block_skip(v_fsdp_bf16params(cfg))
+
+
+def v_psum_embed(cfg):
+    """dcn-v2: shard_map masked-gather + psum lookup (local table grads)."""
+    return dataclasses.replace(cfg, lookup_impl="psum_model")
+
+
+VARIANTS = {
+    "fsdp": v_fsdp,
+    "fsdp_bf16": v_fsdp_bf16params,
+    "bf16params": v_bf16params,
+    "no_remat": v_no_remat,
+    "block_skip": v_block_skip,
+    "fsdp_skip": v_fsdp_skip,
+    "fsdp_bf16_skip": v_fsdp_bf16_skip,
+    "psum_embed": v_psum_embed,
+}
+
+
+def run_gin_halo(out_dir: str, sizes_path: str = "artifacts/gnn_plans/ogb_products_P256.json"):
+    """gin-tu × ogb_products via the paper's partition + halo exchange
+    (models/gnn_dist) — the whole dry-run case is rebuilt because the batch
+    layout changes (plan arrays instead of a global edge list)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import DryrunCase, GNN_SHAPES
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_production_mesh, mesh_devices
+    from repro.launch.roofline import analyze_compiled
+    from repro.models import gnn as gnn_lib
+    from repro.models.gnn_dist import batch_specs_halo, gin_halo_loss_fn
+    from repro.train import optim as optim_lib
+    from repro.train.loop import TrainState
+
+    sizes = json.load(open(sizes_path))
+    mesh = make_production_mesh()
+    chips = mesh_devices(mesh)
+    assert sizes["num_devices"] == chips
+    arch = get_arch("gin-tu")
+    cfg = arch.model_config("ogb_products")
+    d_feat = GNN_SHAPES["ogb_products"]["d_feat"]
+    params_s = jax.eval_shape(functools.partial(gnn_lib.init_params, cfg), jax.random.key(0))
+    params_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_s)
+    batch_s = batch_specs_halo(sizes, d_feat, cfg.d_out)
+    flat = P(tuple(mesh.axis_names))
+    batch_sh = {k: NamedSharding(mesh, flat) for k in batch_s}
+    opt = optim_lib.adamw(optim_lib.cosine_schedule(1e-3, 100, 10_000))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    opt_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_s)
+    state_s = TrainState(params_s, opt_s, jax.ShapeDtypeStruct((), jnp.int32), None)
+    state_sh = TrainState(params_sh, opt_sh, NamedSharding(mesh, P()), None)
+
+    def train_step(state, b):
+        loss, grads = jax.value_and_grad(
+            lambda p: gin_halo_loss_fn(p, b, cfg, mesh)
+        )(state.params)
+        new_p, new_o = opt.update(grads, state.opt_state, state.params, state.step)
+        return TrainState(new_p, new_o, state.step + 1, None), {"loss": loss}
+
+    case = DryrunCase(
+        "gin-tu", "ogb_products", train_step, (state_s, batch_s),
+        (state_sh, batch_sh), donate_argnums=(0,),
+        model_flops=arch.model_flops("ogb_products"),
+        note=f"halo plan: {sizes}",
+    )
+    lowered = case.lower(mesh)
+    compiled = lowered.compile()
+    roof = analyze_compiled(case, lowered, compiled, "16x16", chips)
+    rec = roof.to_dict()
+    rec.update({"status": "ok", "variant": "halo", "parser_v2": True, "note": case.note})
+    print(f"[gin-tu × ogb_products × halo] "
+          f"t_comp={rec['t_compute_s']:.4g} t_mem={rec['t_memory_s']:.4g} "
+          f"t_coll={rec['t_collective_s']:.4g} dominant={rec['dominant']} "
+          f"frac={rec['roofline_fraction']:.4f}")
+    print(f"  memory_analysis: {compiled.memory_analysis()}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "gin-tu__ogb_products__16x16__halo.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS) + ["halo"])
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    if args.variant == "halo":
+        rec = run_gin_halo(args.out)
+        base = json.load(open("artifacts/dryrun/gin-tu__ogb_products__16x16.json"))
+        print("\n--- vs baseline ---")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s", "roofline_fraction"):
+            b, n = base.get(k), rec.get(k)
+            print(f"  {k:20s} {b:.4g} → {n:.4g}" + (f"  ({b/n:.1f}× better)" if n < b else ""))
+        return
+
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
+                   cfg_transform=VARIANTS[args.variant])
+    rec["variant"] = args.variant
+    os.makedirs(args.out, exist_ok=True)
+    key = f"{args.arch}__{args.shape}__{rec['mesh']}__{args.variant}"
+    with open(os.path.join(args.out, key + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+    base_path = os.path.join("artifacts/dryrun",
+                             f"{args.arch}__{args.shape}__{rec['mesh']}.json")
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+        if base.get("status") == "ok":
+            print("\n--- vs baseline ---")
+            for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+                      "roofline_fraction", "bytes_per_device"):
+                b, n = base.get(k), rec.get(k)
+                if b and n:
+                    print(f"  {k:20s} {b:.4g} → {n:.4g}  ({b/n:.2f}× better)"
+                          if n < b else f"  {k:20s} {b:.4g} → {n:.4g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Roofline-term extraction from a compiled dry-run artifact (§ROOFLINE).
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / bytes come from `compiled.cost_analysis()`.  collective_bytes
+is parsed from the optimized HLO text: we sum the *output* shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (output bytes ≈ bytes crossing links per
+participating device for ring algorithms; the per-op table is kept so the
+perf loop can see which collective dominates).
+
+Hardware constants (assignment): TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+__all__ = ["HW", "Roofline", "collective_bytes", "analyze_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+# e.g.  `%all-reduce.5 = f32[1024,512]{1,0} all-reduce(...)`  or tuple shapes
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# replica_groups={{0,1,2,3},...}  or  replica_groups=[16,16]<=[256]
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(instr_text: str, default: int) -> int:
+    m = _GROUPS_SET_RE.search(instr_text)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    m = _GROUPS_IOTA_RE.search(instr_text)
+    if m:  # shape [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def _ring_factor(op: str, g: int) -> float:
+    """Per-device link bytes ≈ factor × output bytes (ring algorithms):
+    all-gather: (g−1)/g·g·shard = output          → ×1
+    all-reduce: 2·(g−1)/g·output                  → ×2·(g−1)/g
+    reduce-scatter: (g−1)·output (output = 1/g)   → ×(g−1)
+    all-to-all / collective-permute: ≈ output     → ×1
+    """
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / max(g, 1)
+    if op == "reduce-scatter":
+        return float(max(g - 1, 1))
+    return 1.0
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 256) -> dict[str, float]:
+    """Per-collective link-bytes per device (ring model), summed per op kind.
+    Line-based: HLO tuple shapes carry `/*index=N*/` comments, so the result
+    shape is everything between the `=` and the op name, comments stripped.
+    `-done` halves of async pairs are skipped (the `-start` carries the
+    shape); `get-tuple-element` projections are not collectives."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "get-tuple-element" in line:
+            continue
+        for op in _COLLECTIVES:
+            idx = line.find(f" {op}(")
+            kind = op
+            if idx < 0:
+                idx = line.find(f" {op}-start(")
+            if idx < 0:
+                continue
+            if f" {op}-done(" in line:
+                break  # async second half: shape already counted at -start
+            lhs, _, _ = line.partition(f" {op}")
+            if "=" not in lhs:
+                break
+            shape_str = _COMMENT_RE.sub("", lhs.split("=", 1)[1])
+            g = _group_size(line, default_group)
+            out[kind] += _shape_bytes(shape_str) * _ring_factor(kind, g)
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All hlo_*/coll_* quantities are PER-DEVICE (XLA reports the per-device
+    SPMD program; verified in EXPERIMENTS.md §Calibration).  model_flops is
+    GLOBAL useful FLOPs — the ideal time divides it by the chip count."""
+
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict[str, float]
+    model_flops: float
+    bytes_per_device: float | None = None
+    hw: HW = dataclasses.field(default_factory=HW)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        global_hlo = self.hlo_flops * self.chips
+        return self.model_flops / global_hlo if global_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """fraction of peak the dominant-term-bound step achieves on useful
+        FLOPs:   (model_flops / chips / peak) / max(term)."""
+        t_ideal = self.model_flops / (self.chips * self.hw.peak_flops)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "cell": self.cell,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def raw_costs(compiled) -> dict[str, float]:
+    """(flops, bytes, collective bytes) of one compiled program, per device.
+    NOTE: XLA counts while/scan bodies ONCE (trip count ignored) — callers
+    lowering scanned models must apply the L1/L2 unroll correction
+    (launch.dryrun._scan_corrected_costs)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total"],
+        "coll_breakdown": {k: v for k, v in coll.items() if k != "total" and v},
+    }
+
+
+def analyze_compiled(case, lowered, compiled, mesh_name: str, chips: int,
+                     costs: dict | None = None) -> Roofline:
+    c = costs or raw_costs(compiled)
+    flops = c["flops"]
+    bytes_accessed = c["bytes"]
+    coll = {"total": c["coll"], **c.get("coll_breakdown", {})}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()  # already per-device
+        mem = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return Roofline(
+        arch=case.arch,
+        cell=case.cell,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        coll_bytes=coll["total"],
+        coll_breakdown={k: v for k, v in coll.items() if k != "total" and v},
+        model_flops=case.model_flops,
+        bytes_per_device=mem,
+    )

@@ -1,0 +1,90 @@
+"""Serving driver: continuous-batching decode over a smoke-scale LM.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+      --requests 12 --slots 4 --max-new 16
+
+Production shapes (prefill_32k / decode_32k cells) are proven by
+launch.dryrun; this driver exercises the engine logic end to end on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.models import transformer as tfm
+from repro.serve.engine import Request, ServeEngine
+
+
+def build_engine(cfg, params, *, slots: int, max_seq: int) -> ServeEngine:
+    @jax.jit
+    def _prefill_slot(cache, slot, tokens):
+        # prefill one slot's range of the slot-batched cache
+        sub = {
+            "k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1),
+            "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1),
+        }
+        logits, new_sub = tfm.prefill(params, tokens, sub, cfg)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], new_sub["k"], slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], new_sub["v"], slot, axis=1),
+        }
+        return cache, logits
+
+    @jax.jit
+    def _decode(cache, tokens, pos):
+        # per-slot positions: decode each slot at its own offset.  The batch
+        # shares one jitted program; masking handles inactive slots.
+        logits, cache = tfm.decode_step_batched_pos(params, cache, pos, tokens, cfg)
+        return logits, cache
+
+    def init_cache():
+        return tfm.init_kv_cache(cfg, slots, max_seq, dtype=jnp.float32)
+
+    def prefill_one(cache, slot, tokens):
+        return _prefill_slot(cache, slot, tokens)
+
+    def decode(cache, tokens, pos):
+        return _decode(cache, tokens, pos)
+
+    return ServeEngine(
+        slots=slots, max_seq=max_seq, init_cache=init_cache,
+        prefill_one=prefill_one, decode=decode,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if arch.family != "lm":
+        raise SystemExit("serving driver is for LM archs")
+    cfg = arch.smoke_config()
+    params = tfm.init_params(cfg, jax.random.key(0))
+    engine = build_engine(cfg, params, slots=args.slots, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(2, cfg.vocab, size=rng.integers(4, 17)).astype(np.int32)
+        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, continuous batching over {args.slots} slots)")
+
+
+if __name__ == "__main__":
+    main()

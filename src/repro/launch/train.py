@@ -1,0 +1,88 @@
+"""End-to-end training driver:  --arch <id> [--steps N] [--smoke].
+
+Runs the real system: config → model → data pipeline → sharded train step →
+checkpointed loop.  On this CPU container only --smoke scales are runnable
+(the full configs are exercised by launch.dryrun); the driver code path is
+identical — the mesh is just 1×1.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+      --steps 100 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.data.pipeline import GraphBatcher, Prefetcher, RecsysPipeline, TokenPipeline
+from repro.graph.generators import rmat
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.train.checkpoint import Checkpointer
+from repro.train.loop import TrainLoop, make_train_step
+from repro.train.optim import adamw, cosine_schedule
+
+
+def _lm_setup(arch, *, smoke: bool, batch: int, seq: int):
+    cfg = arch.smoke_config() if smoke else arch.model_config(dryrun=False)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    loss = lambda p, b: tfm.loss_fn(p, b, cfg)
+    data = TokenPipeline(cfg.vocab, seq, batch)
+    return cfg, params, loss, data
+
+
+def _gnn_setup(arch, *, smoke: bool, batch: int, seq: int):
+    cfg = arch.smoke_config() if smoke else arch.model_config("full_graph_sm")
+    params = gnn_lib.init_params(cfg, jax.random.key(0))
+    g = rmat(512, 4096, seed=0)
+    bt = GraphBatcher(g, d_feat=cfg.d_in, n_classes=max(cfg.d_out, 2))
+    if cfg.kind == "graphcast":
+        raise SystemExit("use examples/graphcast_regression.py for graphcast training")
+    fb = bt.full_batch()
+    loss = lambda p, b: gnn_lib.loss_fn(p, b, cfg)
+    return cfg, params, loss, itertools.repeat(fb)
+
+
+def _recsys_setup(arch, *, smoke: bool, batch: int, seq: int):
+    cfg = arch.smoke_config() if smoke else arch.model_config()
+    params = rec_lib.init_params(cfg, jax.random.key(0))
+    loss = lambda p, b: rec_lib.loss_fn(p, b, cfg)
+    data = RecsysPipeline(cfg.n_dense, cfg.n_sparse, cfg.rows_per_table, batch)
+    return cfg, params, loss, data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    setup = {"lm": _lm_setup, "gnn": _gnn_setup, "recsys": _recsys_setup}[arch.family]
+    cfg, params, loss, data = setup(arch, smoke=args.smoke, batch=args.batch, seq=args.seq)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {args.arch} family={arch.family} params={n_params:,}")
+
+    opt = adamw(cosine_schedule(args.lr, 10, args.steps))
+    init_state, step = make_train_step(loss, opt, compress=args.compress_grads)
+    state = init_state(params)
+    ckpt = Checkpointer(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None
+    loop = TrainLoop(step, checkpointer=ckpt)
+    state = loop.run(state, Prefetcher(iter(data)), num_steps=args.steps)
+    print(f"[train] done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

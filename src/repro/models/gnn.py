@@ -1,0 +1,425 @@
+"""GNN model zoo: GIN, GAT, PNA and a GraphCast-style encode-process-decode.
+
+All message passing is edge-index gather + `jax.ops.segment_sum/max/min`
+(JAX has no CSR — the segment formulation IS the system, per assignment).
+Static shapes throughout: edge arrays are padded and masked, padded edges
+point at a sentinel row so the dry-run lowers with ShapeDtypeStructs.
+
+Batch dict convention (all jnp arrays, static shapes):
+  x          (N, d_in)   node features (grid features for graphcast)
+  src, dst   (E,) int32  edge endpoints (< N valid, == N ⇒ padding)
+  edge_mask  (E,) bool
+  node_mask  (N,) bool
+  labels     (N,) int32 node labels | (G,) graph labels | (N, d_out) targets
+  train_mask (N,) bool   (node classification)
+  graph_ids  (N,) int32  graph membership for batched small graphs
+GraphCast adds mesh arrays — see `GraphCastBatch keys` in `graphcast_forward`.
+
+Distribution: node/edge arrays shard over the flattened DP×model axes (the
+paper's "one flat NoC of engines" view, DESIGN.md §5); `segment_sum` across
+shards is the baseline collective the power-law mapping then reduces (§Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Initializer
+from repro.models.sharding import MeshRules
+
+__all__ = [
+    "GnnConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "mesh_sizes_for_refinement",
+    "graphcast_mesh_plan",
+]
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnConfig:
+    name: str
+    kind: str  # "gin" | "gat" | "pna" | "graphcast"
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_out: int  # n_classes or regression dims
+    task: str = "node_class"  # node_class | graph_class | regression
+    n_heads: int = 1
+    aggregators: tuple[str, ...] = ("sum",)
+    scalers: tuple[str, ...] = ("identity",)
+    mean_log_degree: float = 1.5  # PNA δ (E[log(d+1)] over the train graphs)
+    gin_eps_learnable: bool = True
+    # graphcast only:
+    mesh_refinement: int = 6
+    n_vars: int = 227
+    dtype: typing.Any = jnp.float32
+    param_dtype: typing.Any = jnp.float32
+    rules: MeshRules = dataclasses.field(default_factory=MeshRules)
+
+    @property
+    def num_params(self) -> int:
+        return sum(int(np.prod(s)) for s in _flat_shapes(param_shapes(self)))
+
+
+def _flat_shapes(tree) -> list[tuple[int, ...]]:
+    out = []
+    for v in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, tuple)):
+        out.append(v)
+    return out
+
+
+# ------------------------------ shared ops ---------------------------------
+
+
+def _seg_sum(data: Array, seg: Array, n: int) -> Array:
+    return jax.ops.segment_sum(data, seg, num_segments=n)
+
+
+def segment_softmax(scores: Array, seg: Array, n: int, mask: Array) -> Array:
+    """Numerically-stable softmax over edges grouped by `seg` (dst vertex)."""
+    scores = jnp.where(mask, scores, -jnp.inf)
+    seg_max = jax.ops.segment_max(scores, seg, num_segments=n)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.where(mask, jnp.exp(scores - seg_max[seg]), 0.0)
+    denom = _seg_sum(ex, seg, n)
+    return ex / jnp.maximum(denom[seg], 1e-16)
+
+
+def _mlp_shapes(d_in: int, d_hidden: int, d_out: int, n_hidden: int = 1) -> dict:
+    dims = [d_in] + [d_hidden] * n_hidden + [d_out]
+    shapes = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        shapes[f"w{i}"] = (a, b)
+        shapes[f"b{i}"] = (b,)
+    shapes["ln"] = (d_out,)
+    return shapes
+
+
+def _mlp_apply(p: dict, x: Array, *, final_ln: bool = True) -> Array:
+    n = sum(1 for k in p if k.startswith("w"))
+    h = x
+    for i in range(n):
+        h = jnp.einsum("...d,df->...f", h, p[f"w{i}"].astype(h.dtype)) + p[f"b{i}"].astype(h.dtype)
+        if i < n - 1:
+            h = jax.nn.silu(h)
+    if final_ln:
+        mu = h.mean(-1, keepdims=True)
+        var = ((h - mu) ** 2).mean(-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + 1e-6) * p["ln"].astype(h.dtype)
+    return h
+
+
+# ------------------------------- params ------------------------------------
+
+
+def param_shapes(cfg: GnnConfig) -> dict:
+    d, h = cfg.d_hidden, cfg.n_heads
+    layers = []
+    if cfg.kind == "gin":
+        d_prev = cfg.d_in
+        for _ in range(cfg.n_layers):
+            layers.append({"mlp": _mlp_shapes(d_prev, d, d, n_hidden=1), "eps": ()})
+            d_prev = d
+        head = {"w": (d, cfg.d_out), "b": (cfg.d_out,)}
+    elif cfg.kind == "gat":
+        d_prev = cfg.d_in
+        graph_task = cfg.task == "graph_class"
+        for li in range(cfg.n_layers):
+            last = li == cfg.n_layers - 1
+            heads = h if (not last or graph_task) else 1
+            width = d if (not last or graph_task) else cfg.d_out
+            layers.append(
+                {"w": (d_prev, heads * width), "a_src": (heads, width), "a_dst": (heads, width)}
+            )
+            d_prev = heads * width if not last else (width if not graph_task else width)
+        # graph-level tasks pool node embeddings and classify (GAT paper uses
+        # node tasks only; readout follows the GIN protocol)
+        head = {"w": (d, cfg.d_out), "b": (cfg.d_out,)} if graph_task else {}
+    elif cfg.kind == "pna":
+        d_prev = cfg.d_in
+        n_agg = len(cfg.aggregators) * len(cfg.scalers)
+        for _ in range(cfg.n_layers):
+            layers.append(
+                {
+                    "pre": _mlp_shapes(2 * d_prev, d, d, n_hidden=0),
+                    "post": _mlp_shapes(n_agg * d + d_prev, d, d, n_hidden=0),
+                }
+            )
+            d_prev = d
+        head = {"w": (d, cfg.d_out), "b": (cfg.d_out,)}
+    elif cfg.kind == "graphcast":
+        d = cfg.d_hidden
+        enc = {
+            "grid_embed": _mlp_shapes(cfg.d_in, d, d),
+            "mesh_embed": _mlp_shapes(3, d, d),
+            "e_g2m_embed": _mlp_shapes(4, d, d),
+            "e_m2m_embed": _mlp_shapes(4, d, d),
+            "e_m2g_embed": _mlp_shapes(4, d, d),
+            "g2m_edge": _mlp_shapes(3 * d, d, d),
+            "g2m_node": _mlp_shapes(2 * d, d, d),
+        }
+        for _ in range(cfg.n_layers):
+            layers.append(
+                {"m2m_edge": _mlp_shapes(3 * d, d, d), "m2m_node": _mlp_shapes(2 * d, d, d)}
+            )
+        head = {
+            "m2g_edge": _mlp_shapes(3 * d, d, d),
+            "m2g_node": _mlp_shapes(2 * d, d, d),
+            "out": _mlp_shapes(d, d, cfg.d_out),
+            **enc,
+        }
+    else:
+        raise ValueError(f"unknown gnn kind {cfg.kind!r}")
+    return {"layers": layers, "head": head}
+
+
+def _init_tree(ini: Initializer, shapes, dtype):
+    if isinstance(shapes, dict):
+        return {k: _init_tree(ini, v, dtype) for k, v in shapes.items()}
+    if isinstance(shapes, list):
+        return [_init_tree(ini, v, dtype) for v in shapes]
+    shape = shapes
+    if shape == ():  # scalars (gin eps)
+        return jnp.zeros((), dtype)
+    if len(shape) == 1:  # biases / layernorm scales
+        return jnp.ones(shape, dtype) if shape else jnp.zeros(shape, dtype)
+    return ini.fan_in(shape, dtype)
+
+
+def init_params(cfg: GnnConfig, key: jax.Array) -> dict:
+    ini = Initializer(key)
+    params = _init_tree(ini, param_shapes(cfg), cfg.param_dtype)
+    # biases zero, layernorm ones
+    def fix(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name.startswith("b"):
+            return jnp.zeros_like(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ------------------------------ forwards -----------------------------------
+
+
+def _gather_src(h_pad: Array, src: Array) -> Array:
+    return h_pad[src]
+
+
+def _pad_nodes(h: Array) -> Array:
+    """Append the sentinel row (index N) that padded edges point at."""
+    return jnp.concatenate([h, jnp.zeros((1, h.shape[-1]), h.dtype)], axis=0)
+
+
+def gin_forward(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    r = cfg.rules
+    h = batch["x"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    for lp in params["layers"]:
+        hp = _pad_nodes(h)
+        msg = hp[src] * emask[:, None]
+        agg = _seg_sum(msg, dst, n + 1)[:n]
+        eps = lp["eps"] if cfg.gin_eps_learnable else 0.0
+        h = _mlp_apply(lp["mlp"], (1.0 + eps) * h + agg)
+        h = jax.nn.silu(h)
+        h = r.act_tokens_sp(h)
+    return h
+
+
+def gat_forward(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    r = cfg.rules
+    h = batch["x"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    n_layers = len(params["layers"])
+    for li, lp in enumerate(params["layers"]):
+        heads, width = lp["a_src"].shape
+        wh = jnp.einsum("nd,dk->nk", h, lp["w"].astype(h.dtype)).reshape(n, heads, width)
+        whp = jnp.concatenate([wh, jnp.zeros((1, heads, width), wh.dtype)], axis=0)
+        s_src = jnp.einsum("ehw,hw->eh", whp[src], lp["a_src"].astype(h.dtype))
+        s_dst = jnp.einsum("ehw,hw->eh", whp[dst], lp["a_dst"].astype(h.dtype))
+        scores = jax.nn.leaky_relu(s_src + s_dst, 0.2)  # (E, H)
+        alpha = segment_softmax(scores, dst, n + 1, emask[:, None])
+        out = _seg_sum(whp[src] * alpha[..., None], dst, n + 1)[:n]  # (N, H, W)
+        if li < n_layers - 1:
+            h = jax.nn.elu(out).reshape(n, heads * width)
+        else:
+            h = out.mean(axis=1)  # final layer: average heads (GAT paper)
+        h = r.act_tokens_sp(h)
+    return h
+
+
+_PNA_DELTA_EPS = 1e-5
+
+
+def pna_forward(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    r = cfg.rules
+    h = batch["x"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    deg = _seg_sum(emask.astype(cfg.dtype), dst, n + 1)[:n]
+    log_deg = jnp.log1p(deg)[:, None]
+    delta = cfg.mean_log_degree
+    for lp in params["layers"]:
+        hp = _pad_nodes(h)
+        pre = _mlp_apply(lp["pre"], jnp.concatenate([hp[src], hp[dst]], -1))  # (E, d)
+        pre = pre * emask[:, None]
+        aggs = []
+        for a in cfg.aggregators:
+            if a == "mean":
+                s = _seg_sum(pre, dst, n + 1)[:n]
+                aggs.append(s / jnp.maximum(deg, 1.0)[:, None])
+            elif a == "max":
+                v = jnp.where(emask[:, None], pre, -jnp.inf)
+                m = jax.ops.segment_max(v, dst, num_segments=n + 1)[:n]
+                aggs.append(jnp.where(jnp.isfinite(m), m, 0.0))
+            elif a == "min":
+                v = jnp.where(emask[:, None], pre, jnp.inf)
+                m = jax.ops.segment_min(v, dst, num_segments=n + 1)[:n]
+                aggs.append(jnp.where(jnp.isfinite(m), m, 0.0))
+            elif a == "std":
+                s1 = _seg_sum(pre, dst, n + 1)[:n] / jnp.maximum(deg, 1.0)[:, None]
+                s2 = _seg_sum(pre**2, dst, n + 1)[:n] / jnp.maximum(deg, 1.0)[:, None]
+                aggs.append(jnp.sqrt(jnp.maximum(s2 - s1**2, 0.0) + _PNA_DELTA_EPS))
+            elif a == "sum":
+                aggs.append(_seg_sum(pre, dst, n + 1)[:n])
+            else:
+                raise ValueError(f"unknown aggregator {a!r}")
+        scaled = []
+        for agg in aggs:
+            for sc in cfg.scalers:
+                if sc == "identity":
+                    scaled.append(agg)
+                elif sc == "amplification":
+                    scaled.append(agg * (log_deg / delta))
+                elif sc == "attenuation":
+                    scaled.append(agg * (delta / jnp.maximum(log_deg, _PNA_DELTA_EPS)))
+                else:
+                    raise ValueError(f"unknown scaler {sc!r}")
+        h = _mlp_apply(lp["post"], jnp.concatenate([h] + scaled, -1))
+        h = jax.nn.silu(h)
+        h = r.act_tokens_sp(h)
+    return h
+
+
+def _interaction(edge_mlp, node_mlp, h_src_nodes, h_dst_nodes, e, src, dst, emask, n_dst):
+    """One InteractionNetwork block: edge update, aggregate, node update."""
+    sp = _pad_nodes(h_src_nodes)
+    dp = _pad_nodes(h_dst_nodes)
+    e_new = _mlp_apply(edge_mlp, jnp.concatenate([e, sp[src], dp[dst]], -1)) + e
+    agg = _seg_sum(e_new * emask[:, None], dst, n_dst + 1)[:n_dst]
+    h_new = _mlp_apply(node_mlp, jnp.concatenate([h_dst_nodes, agg], -1)) + h_dst_nodes
+    return h_new, e_new
+
+
+def graphcast_forward(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    """GraphCast encode-process-decode.  Extra batch keys:
+      mesh_x (M, 3); g2m_src/g2m_dst/g2m_feat/g2m_mask; m2m_*; m2g_*
+      (g2m: src indexes grid, dst indexes mesh; m2g: src mesh, dst grid).
+    Returns (N_grid, d_out) predictions."""
+    r = cfg.rules
+    head = params["head"]
+    hg = _mlp_apply(head["grid_embed"], batch["x"].astype(cfg.dtype))
+    hm = _mlp_apply(head["mesh_embed"], batch["mesh_x"].astype(cfg.dtype))
+    n_grid, n_mesh = hg.shape[0], hm.shape[0]
+    e_g2m = _mlp_apply(head["e_g2m_embed"], batch["g2m_feat"].astype(cfg.dtype))
+    e_m2m = _mlp_apply(head["e_m2m_embed"], batch["m2m_feat"].astype(cfg.dtype))
+    e_m2g = _mlp_apply(head["e_m2g_embed"], batch["m2g_feat"].astype(cfg.dtype))
+    # encoder: grid → mesh
+    hm, _ = _interaction(
+        head["g2m_edge"], head["g2m_node"], hg, hm, e_g2m,
+        batch["g2m_src"], batch["g2m_dst"], batch["g2m_mask"], n_mesh,
+    )
+    hm = r.act_tokens_sp(hm)
+    # processor: n_layers of mesh GNN on the multimesh
+    for lp in params["layers"]:
+        hm, e_m2m = _interaction(
+            lp["m2m_edge"], lp["m2m_node"], hm, hm, e_m2m,
+            batch["m2m_src"], batch["m2m_dst"], batch["m2m_mask"], n_mesh,
+        )
+        hm = r.act_tokens_sp(hm)
+    # decoder: mesh → grid
+    hg, _ = _interaction(
+        head["m2g_edge"], head["m2g_node"], hm, hg, e_m2g,
+        batch["m2g_src"], batch["m2g_dst"], batch["m2g_mask"], n_grid,
+    )
+    return _mlp_apply(head["out"], hg, final_ln=False)
+
+
+def forward(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    if cfg.kind == "gin":
+        h = gin_forward(params, batch, cfg)
+    elif cfg.kind == "gat":
+        h = gat_forward(params, batch, cfg)
+        if cfg.task != "graph_class":
+            return h  # last layer already maps to classes (single-head avg)
+    elif cfg.kind == "pna":
+        h = pna_forward(params, batch, cfg)
+    elif cfg.kind == "graphcast":
+        return graphcast_forward(params, batch, cfg)
+    else:
+        raise ValueError(cfg.kind)
+    if cfg.task == "graph_class":
+        g_ids = batch["graph_ids"]
+        n_graphs = batch["labels"].shape[0]
+        pooled = _seg_sum(h * batch["node_mask"][:, None], g_ids, n_graphs)
+        return jnp.einsum("gd,dc->gc", pooled, params["head"]["w"].astype(h.dtype)) + params[
+            "head"
+        ]["b"].astype(h.dtype)
+    return jnp.einsum("nd,dc->nc", h, params["head"]["w"].astype(h.dtype)) + params["head"][
+        "b"
+    ].astype(h.dtype)
+
+
+def loss_fn(params: dict, batch: dict, cfg: GnnConfig) -> Array:
+    out = forward(params, batch, cfg)
+    if cfg.task == "regression":
+        tgt = batch["labels"].astype(jnp.float32)
+        mask = batch["node_mask"].astype(jnp.float32)[:, None]
+        return jnp.sum(((out.astype(jnp.float32) - tgt) ** 2) * mask) / jnp.maximum(
+            mask.sum() * out.shape[-1], 1.0
+        )
+    logits = out.astype(jnp.float32)
+    labels = batch["labels"]
+    if cfg.task == "graph_class":
+        mask = jnp.ones(labels.shape[0], jnp.float32)
+    else:
+        mask = batch.get("train_mask", batch["node_mask"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), -1)[..., 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------- graphcast mesh derivation -----------------------
+
+
+def mesh_sizes_for_refinement(r: int) -> tuple[int, int]:
+    """(nodes, directed multimesh edges) of the icosahedral mesh at level r."""
+    nodes = 10 * 4**r + 2
+    undirected = 30 * (4 ** (r + 1) - 1) // 3  # Σ_{i≤r} 30·4^i (multimesh union)
+    return nodes, 2 * undirected
+
+
+def graphcast_mesh_plan(n_grid: int, max_refinement: int) -> dict[str, int]:
+    """Cap the mesh refinement so mesh nodes ≤ grid nodes (DESIGN.md §4),
+    and derive the g2m / m2g edge budgets (≈4 and 3 per grid node)."""
+    r = 0
+    while r < max_refinement and mesh_sizes_for_refinement(r + 1)[0] <= n_grid:
+        r += 1
+    n_mesh, e_m2m = mesh_sizes_for_refinement(r)
+    return {
+        "refinement": r,
+        "n_mesh": n_mesh,
+        "e_m2m": e_m2m,
+        "e_g2m": 4 * n_grid,
+        "e_m2g": 3 * n_grid,
+    }

@@ -1,0 +1,154 @@
+"""Shared neural-network building blocks (pure-JAX, pytree params).
+
+Everything is functional: `init_*` builds a params pytree (+ a parallel
+tree of `jax.sharding.PartitionSpec`s from `repro.models.sharding`), and the
+apply functions are jit/pjit-friendly.  No framework dependency (flax etc.):
+a production framework needs full control of param layout for scan-stacking,
+FSDP sharding and checkpoint compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Initializer",
+    "rms_norm",
+    "rope_table",
+    "apply_rope",
+    "gqa_attention",
+    "swiglu",
+    "dense",
+    "softmax_cross_entropy",
+]
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class Initializer:
+    """Split-once key threading for param init."""
+
+    key: jax.Array
+
+    def next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, scale: float, dtype=jnp.float32) -> Array:
+        return (jax.random.normal(self.next(), shape, jnp.float32) * scale).astype(dtype)
+
+    def fan_in(self, shape, dtype=jnp.float32) -> Array:
+        # variance-scaling on the contracted dim (second-to-last for matmuls)
+        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        return self.normal(shape, 1.0 / math.sqrt(fan), dtype)
+
+    def zeros(self, shape, dtype=jnp.float32) -> Array:
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape, dtype=jnp.float32) -> Array:
+        return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: Array, scale: Array, *, eps: float = 1e-6) -> Array:
+    """RMSNorm in fp32 accumulation regardless of input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rope_table(seq_len: int, d_head: int, *, theta: float = 10000.0) -> tuple[Array, Array]:
+    """(cos, sin) tables of shape (seq_len, d_head//2), fp32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., S, n_heads, d_head); cos/sin: (S, d_head//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over head axis: (..., S, 1, half)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def gqa_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    q_offset: Array | int = 0,
+    kv_valid_len: Array | None = None,
+    logits_soft_cap: float | None = None,
+) -> Array:
+    """Grouped-query attention, pure-jnp reference path (XLA fuses this well
+    on TPU; the Pallas flash kernel is selected by ops-level dispatch when
+    enabled — see repro.kernels.flash_attention.ops).
+
+    q: (B, Sq, Hq, dh);  k/v: (B, Skv, Hkv, dh) with Hq = G·Hkv.
+    q_offset: absolute position of q[0] (decode: the cache write position).
+    kv_valid_len: optional (B,) count of valid cache slots (decode masking).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    # (B, Hkv, G, Sq, dh) x (B, Hkv, Skv, dh) -> (B, Hkv, G, Sq, Skv)
+    qf = qf.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    if logits_soft_cap is not None:
+        scores = logits_soft_cap * jnp.tanh(scores / logits_soft_cap)
+    mask = None
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]  # (Sq, Skv)
+        mask = mask[None, None, None]
+    if kv_valid_len is not None:
+        vmask = jnp.arange(skv)[None, :] < kv_valid_len[:, None]  # (B, Skv)
+        vmask = vmask[:, None, None, None, :]
+        mask = vmask if mask is None else (mask & vmask)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """LLaMA-family gated MLP: down( silu(x·Wg) ⊙ (x·Wu) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+def dense(x: Array, w: Array, b: Array | None = None) -> Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def softmax_cross_entropy(logits: Array, labels: Array, *, valid: Array | None = None) -> Array:
+    """Mean token cross-entropy in fp32.  logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        return (nll * v).sum() / jnp.maximum(v.sum(), 1.0)
+    return nll.mean()

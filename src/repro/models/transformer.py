@@ -1,0 +1,403 @@
+"""LLaMA-family transformer (dense + MoE) with scan-over-layers, GQA, RoPE.
+
+Design points for multi-pod scale:
+  * layer weights are stacked on a leading L dim and the forward is one
+    `lax.scan` — HLO size is O(1) in depth (granite-34b's 88 layers compile
+    as one body), and remat policy wraps the scan body.
+  * attention auto-selects blocked (flash-style) computation above a
+    sequence threshold — naive attention would materialise Sq×Skv scores,
+    impossible at 32k.
+  * all sharding via MeshRules (FSDP + Megatron TP + sequence parallelism);
+    no mesh ⇒ every constraint no-ops, so CPU smoke tests run the same code.
+  * serve path: bf16 KV cache ring with static shapes, decode one token/step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    Initializer,
+    apply_rope,
+    gqa_attention,
+    rms_norm,
+    rope_table,
+    softmax_cross_entropy,
+)
+from repro.models.sharding import MeshRules
+
+__all__ = ["TransformerConfig", "init_params", "param_specs", "forward",
+           "loss_fn", "init_kv_cache", "decode_step", "prefill"]
+
+Array = jnp.ndarray
+BLOCKED_ATTN_THRESHOLD = 8192  # Sq·Skv above which the blocked path is used
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    rope_theta: float = 10000.0
+    moe: "moe_lib.MoEConfig | None" = None
+    dtype: typing.Any = jnp.bfloat16  # activation dtype
+    param_dtype: typing.Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+    tie_embeddings: bool = False
+    attn_block_q: int = 512
+    attn_block_k: int = 1024
+    attn_skip_masked_blocks: bool = False  # causal block skipping (perf lever)
+    rules: MeshRules = dataclasses.field(default_factory=MeshRules)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def num_params(self) -> int:
+        """Parameter count N for MODEL_FLOPS = 6·N·D accounting."""
+        dh = self.head_dim
+        attn = self.d_model * dh * (self.n_heads + 2 * self.n_kv_heads) + (
+            self.n_heads * dh * self.d_model
+        )
+        if self.moe is not None:
+            m = self.moe
+            ffn = 3 * self.d_model * m.d_ff_expert * m.num_experts
+            ffn += 3 * self.d_model * m.d_ff_shared
+            ffn += self.d_model * m.num_experts  # router
+        else:
+            ffn = 3 * self.d_model * self.d_ff
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+    @property
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k experts count)."""
+        if self.moe is None:
+            return self.num_params
+        m = self.moe
+        dh = self.head_dim
+        attn = self.d_model * dh * (self.n_heads + 2 * self.n_kv_heads) + (
+            self.n_heads * dh * self.d_model
+        )
+        ffn = 3 * self.d_model * m.d_ff_expert * m.top_k + 3 * self.d_model * m.d_ff_shared
+        ffn += self.d_model * m.num_experts
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+
+# ----------------------------- parameters ---------------------------------
+
+
+def _layer_shapes(cfg: TransformerConfig) -> dict[str, tuple[int, ...]]:
+    d, dh = cfg.d_model, cfg.head_dim
+    shapes = {
+        "attn_norm": (d,),
+        "wq": (d, cfg.n_heads * dh),
+        "wk": (d, cfg.n_kv_heads * dh),
+        "wv": (d, cfg.n_kv_heads * dh),
+        "wo": (cfg.n_heads * dh, d),
+        "mlp_norm": (d,),
+    }
+    if cfg.moe is None:
+        shapes.update({"w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff), "w_down": (cfg.d_ff, d)})
+    else:
+        shapes.update(moe_lib.layer_shapes(cfg.moe, d))
+    return shapes
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    ini = Initializer(key)
+    L = cfg.n_layers
+    layers = {}
+    for name, shape in _layer_shapes(cfg).items():
+        full = (L, *shape)  # always layer-stacked (scan and unrolled share layout)
+        if "norm" in name:
+            layers[name] = ini.ones(full, cfg.param_dtype)
+        else:
+            layers[name] = ini.fan_in(full, cfg.param_dtype)
+    params = {
+        "embed": ini.normal((cfg.vocab, cfg.d_model), 0.02, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": ini.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ini.fan_in((cfg.d_model, cfg.vocab), cfg.param_dtype)
+    return params
+
+
+def param_specs(cfg: TransformerConfig, mesh=None) -> dict:
+    """PartitionSpec tree parallel to init_params' output."""
+    from jax.sharding import PartitionSpec as P
+
+    r = cfg.rules
+    d, dh = cfg.d_model, cfg.head_dim
+    pre = 1  # params are always layer-stacked
+    layers = {
+        "attn_norm": r.replicated(prefix=pre + 1),
+        "wq": r.col_parallel(d, cfg.n_heads * dh, prefix=pre, mesh=mesh),
+        "wk": r.col_parallel(d, cfg.n_kv_heads * dh, prefix=pre, mesh=mesh),
+        "wv": r.col_parallel(d, cfg.n_kv_heads * dh, prefix=pre, mesh=mesh),
+        "wo": r.row_parallel(cfg.n_heads * dh, d, prefix=pre, mesh=mesh),
+        "mlp_norm": r.replicated(prefix=pre + 1),
+    }
+    if cfg.moe is None:
+        layers.update({
+            "w_gate": r.col_parallel(d, cfg.d_ff, prefix=pre, mesh=mesh),
+            "w_up": r.col_parallel(d, cfg.d_ff, prefix=pre, mesh=mesh),
+            "w_down": r.row_parallel(cfg.d_ff, d, prefix=pre, mesh=mesh),
+        })
+    else:
+        layers.update(moe_lib.layer_specs(cfg.moe, d, r, prefix=pre, mesh=mesh))
+    specs = {
+        "embed": r.vocab_embed(cfg.vocab, d, mesh=mesh),
+        "layers": layers,
+        "final_norm": P(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = r.col_parallel(d, cfg.vocab, prefix=0, mesh=mesh)
+    return specs
+
+
+# ------------------------------ forward -----------------------------------
+
+
+def _attention_block(cfg: TransformerConfig, lp: dict, x: Array, cos, sin,
+                     cache=None, pos=None) -> tuple[Array, tuple | None]:
+    """x: (B, S, D).  cache=(k,v) of (B, Smax, Hkv, dh) enables decode."""
+    r = cfg.rules
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    h = rms_norm(x, lp["attn_norm"])
+    h = r.act_btd_gathered(h)
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, dh)
+    q, k = r.act_heads(q), r.act_heads(apply_rope(k, cos, sin))
+    q = r.act_heads(apply_rope(q, cos, sin))
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+        new_cache = (ck, cv)
+        valid = jnp.full((b,), pos + s, jnp.int32)
+        if ck.shape[1] * s > BLOCKED_ATTN_THRESHOLD * 64:
+            out = flash_attention(
+                q, ck, cv, causal=True, q_offset=pos, kv_valid_len=valid,
+                impl="ref", block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+            )
+        else:
+            out = gqa_attention(q, ck, cv, causal=True, q_offset=pos, kv_valid_len=valid)
+    elif s * s > BLOCKED_ATTN_THRESHOLD * 64:
+        out = flash_attention(
+            q, k, v, causal=True, impl="ref",
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+            skip_masked_blocks=cfg.attn_skip_masked_blocks,
+        )
+    else:
+        out = gqa_attention(q, k, v, causal=True)
+    out = r.act_heads(out)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, cfg.n_heads * dh), lp["wo"].astype(x.dtype))
+    return r.act_btd(out), new_cache
+
+
+def _ffn_block(cfg: TransformerConfig, lp: dict, x: Array) -> Array:
+    r = cfg.rules
+    h = rms_norm(x, lp["mlp_norm"])
+    h = r.act_btd_gathered(h)
+    if cfg.moe is None:
+        g = jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(h.dtype))
+        u = jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(h.dtype))
+        out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, lp["w_down"].astype(h.dtype))
+    else:
+        out = moe_lib.moe_block(cfg.moe, lp, h, rules=r)
+    return r.act_btd(out)
+
+
+def _layer_fn(cfg: TransformerConfig, x: Array, lp: dict, cos, sin,
+              cache=None, pos=None):
+    attn_out, new_cache = _attention_block(cfg, lp, x, cos, sin, cache, pos)
+    x = x + attn_out
+    x = x + _ffn_block(cfg, lp, x)
+    return x, new_cache
+
+
+def forward(params: dict, tokens: Array, cfg: TransformerConfig) -> Array:
+    """tokens (B, S) → logits (B, S, V)."""
+    r = cfg.rules
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = r.act_btd(x)
+    s = tokens.shape[1]
+    cos, sin = rope_table(s, cfg.head_dim, theta=cfg.rope_theta)
+
+    def body(x, lp):
+        return _layer_fn(cfg, x, lp, cos, sin)[0], None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in params["layers"].items()}
+            x, _ = body(x, lp)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    return logits
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig) -> Array:
+    logits = forward(params, batch["tokens"], cfg)
+    return softmax_cross_entropy(logits, batch["labels"], valid=batch.get("valid"))
+
+
+# ------------------------------ serving -----------------------------------
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: TransformerConfig, mesh=None):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.sharding import axis_if_divisible
+
+    r = cfg.rules
+    kv_ax = axis_if_divisible(cfg.n_kv_heads, r.model, mesh)
+    spec = P(None, r.batch, None, kv_ax, None)
+    return {"k": spec, "v": spec}
+
+
+def decode_step(params: dict, cache: dict, pos, tokens: Array,
+                cfg: TransformerConfig) -> tuple[Array, dict]:
+    """One decode step: tokens (B, 1) at absolute position `pos` (int32
+    scalar, static under jit via donated carry).  Returns (logits, cache)."""
+    r = cfg.rules
+    x = params["embed"].astype(cfg.dtype)[tokens]  # (B, 1, D)
+    max_seq = cache["k"].shape[2]
+    cos_t, sin_t = rope_table(max_seq, cfg.head_dim, theta=cfg.rope_theta)
+    cos = jax.lax.dynamic_slice_in_dim(cos_t, pos, 1, axis=0)
+    sin = jax.lax.dynamic_slice_in_dim(sin_t, pos, 1, axis=0)
+
+    def body(x, layer_in):
+        lp, ck, cv = layer_in
+        x, new_cache = _layer_fn(cfg, x, lp, cos, sin, cache=(ck, cv), pos=pos)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in params["layers"].items()}
+            x, (ck, cv) = body(x, (lp, cache["k"][i], cache["v"][i]))
+            nks.append(ck), nvs.append(cv)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    return logits[:, -1], {"k": nk, "v": nv}
+
+
+def decode_step_batched_pos(params: dict, cache: dict, pos: Array, tokens: Array,
+                            cfg: TransformerConfig) -> tuple[Array, dict]:
+    """Continuous-batching decode: every slot at its own position.
+    pos: (B,) int32 absolute write positions; tokens: (B, 1)."""
+    r = cfg.rules
+    b = tokens.shape[0]
+    dh = cfg.head_dim
+    x = params["embed"].astype(cfg.dtype)[tokens]  # (B, 1, D)
+    max_seq = cache["k"].shape[2]
+    cos_t, sin_t = rope_table(max_seq, dh, theta=cfg.rope_theta)
+    cos_b, sin_b = cos_t[pos][:, None, None, :], sin_t[pos][:, None, None, :]  # (B,1,1,half)
+
+    def rope_at(v):  # v: (B, 1, H, dh)
+        half = v.shape[-1] // 2
+        v1, v2 = v[..., :half], v[..., half:]
+        return jnp.concatenate([v1 * cos_b - v2 * sin_b, v2 * cos_b + v1 * sin_b], -1).astype(
+            v.dtype
+        )
+
+    def attn(lp, x, ck, cv):
+        h = rms_norm(x, lp["attn_norm"])
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype)).reshape(b, 1, cfg.n_heads, dh)
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype)).reshape(b, 1, cfg.n_kv_heads, dh)
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype)).reshape(b, 1, cfg.n_kv_heads, dh)
+        q, k = rope_at(q), rope_at(k)
+        upd = jax.vmap(lambda c, kk, p: jax.lax.dynamic_update_slice_in_dim(c, kk, p, axis=0))
+        ck = upd(ck, k.astype(ck.dtype), pos)
+        cv = upd(cv, v.astype(cv.dtype), pos)
+        out = gqa_attention(q, ck, cv, causal=False, kv_valid_len=pos + 1)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(b, 1, cfg.n_heads * dh),
+                         lp["wo"].astype(x.dtype))
+        return out, ck, cv
+
+    def body(x, layer_in):
+        lp, ck, cv = layer_in
+        a, ck, cv = attn(lp, x, ck, cv)
+        x = x + a
+        x = x + _ffn_block(cfg, lp, x)
+        return x, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in params["layers"].items()}
+            x, (ck, cv) = body(x, (lp, cache["k"][i], cache["v"][i]))
+            nks.append(ck), nvs.append(cv)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    return logits[:, -1], {"k": nk, "v": nv}
+
+
+def prefill(params: dict, tokens: Array, cache: dict, cfg: TransformerConfig):
+    """Prefill the cache with a full prompt; returns (last_logits, cache)."""
+    r = cfg.rules
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = r.act_btd(x)
+    s = tokens.shape[1]
+    cos, sin = rope_table(s, cfg.head_dim, theta=cfg.rope_theta)
+
+    def body(x, layer_in):
+        lp, ck, cv = layer_in
+        x, new_cache = _layer_fn(cfg, x, lp, cos, sin, cache=(ck, cv), pos=0)
+        return x, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in params["layers"].items()}
+            x, (ck, cv) = body(x, (lp, cache["k"][i], cache["v"][i]))
+            nks.append(ck), nvs.append(cv)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
+    return logits, {"k": nk, "v": nv}

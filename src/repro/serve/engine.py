@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous batching over a static KV-cache ring.
+
+Production shape: a fixed decode batch of `slots`; requests are admitted
+into free slots (prefill writes the slot's KV range), every engine step
+decodes one token for all active slots, finished slots (EOS / max_len) are
+freed and refilled from the queue.  All jitted programs have static shapes
+(slot count, max_seq), so the decode loop never recompiles — the serving
+equivalent of straggler-free static-shape training steps.
+
+The decode step itself is `repro.models.transformer.decode_step` under the
+serving mesh (batch slots sharded over DP axes, KV heads over model — see
+kv_cache_specs).  This module is deliberately model-agnostic: it takes the
+prefill/decode callables, so tests drive it with a tiny CPU model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        *,
+        slots: int,
+        max_seq: int,
+        init_cache: typing.Callable[[], dict],
+        prefill_one: typing.Callable,  # (cache, slot, tokens) -> (cache, last_logits)
+        decode: typing.Callable,  # (cache, tokens (S,1), pos (S,)) -> (logits (S,V), cache)
+        eos_id: int = 1,
+        greedy: bool = True,
+    ):
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = init_cache()
+        self.prefill_one = prefill_one
+        self.decode = decode
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.active: list[Request | None] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)  # next write position per slot
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    # ------------------------------ admission ------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.prompt.size + req.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds max_seq")
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.cache, last_logits = self.prefill_one(
+                    self.cache, slot, jnp.asarray(req.prompt[None, :])
+                )
+                self.pos[slot] = req.prompt.size
+                first = int(jnp.argmax(last_logits[0]))
+                req.out_tokens.append(first)
+                self.active[slot] = req
+
+    # ------------------------------ stepping -------------------------------
+
+    def step(self) -> int:
+        """One engine iteration: admit, decode one token for all active slots.
+        Returns the number of active slots."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            tokens[s, 0] = self.active[s].out_tokens[-1]
+        logits, self.cache = self.decode(self.cache, jnp.asarray(tokens), jnp.asarray(self.pos))
+        logits = np.asarray(logits)
+        for s in live:
+            req = self.active[s]
+            self.pos[s] += 1
+            nxt = int(np.argmax(logits[s]))
+            req.out_tokens.append(nxt)
+            if (
+                nxt == self.eos_id
+                or len(req.out_tokens) >= req.max_new_tokens
+                or self.pos[s] + 1 >= self.max_seq
+            ):
+                req.done = True
+                self.completed.append(req)
+                self.active[s] = None  # slot freed → refilled next step
+        return len(live)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            self.step()
+        return self.completed

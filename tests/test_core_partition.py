@@ -1,0 +1,112 @@
+"""Paper core: Algorithm 2 partitioning — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.degree import fit_power_law, hub_set, out_degrees, skew_stats
+from repro.core.partition import (
+    hash_partition,
+    partition_by_name,
+    powerlaw_partition,
+    random_partition,
+    range_partition,
+)
+from repro.graph.generators import chung_lu, rmat
+
+
+def edges(n, e, seed=0):
+    g = rmat(n, e, seed=seed)
+    return g.src, g.dst, g.num_nodes
+
+
+class TestPowerlawPartition:
+    def test_all_assigned(self):
+        src, dst, n = edges(200, 1600)
+        p = powerlaw_partition(src, dst, n, 8)
+        assert p.vertex_part.shape == (n,)
+        assert ((0 <= p.vertex_part) & (p.vertex_part < 8)).all()
+        assert ((0 <= p.edge_part) & (p.edge_part < 8)).all()
+
+    def test_source_cut(self):
+        """Each edge lives with its source vertex's engine (pre-spill)."""
+        src, dst, n = edges(200, 1600)
+        p = powerlaw_partition(src, dst, n, 8, max_size=10**9)
+        np.testing.assert_array_equal(p.edge_part, p.vertex_part[src])
+
+    def test_cyclic_deal_over_degree_sort(self):
+        """Vertices at sorted positions i, i+P land on consecutive engines."""
+        src, dst, n = edges(200, 1600)
+        p = powerlaw_partition(src, dst, n, 4)
+        pos_part = p.vertex_part[p.order]  # partition in degree-sorted order
+        np.testing.assert_array_equal(pos_part, np.arange(n) % 4)
+
+    def test_better_balance_than_range(self):
+        src, dst, n = edges(500, 8000, seed=1)
+        bal_pl = powerlaw_partition(src, dst, n, 16).edge_balance()
+        bal_rg = range_partition(src, dst, n, 16).edge_balance()
+        assert bal_pl <= bal_rg  # the paper's load-balancing claim
+
+    def test_capacity_spill(self):
+        src, dst, n = edges(100, 2000, seed=2)
+        cap = 2000 // 4 + 60
+        p = powerlaw_partition(src, dst, n, 4, max_size=cap)
+        assert p.edge_counts().max() <= cap
+
+    def test_capacity_too_small_raises(self):
+        src, dst, n = edges(100, 2000, seed=2)
+        with pytest.raises(ValueError):
+            powerlaw_partition(src, dst, n, 4, max_size=100)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(10, 120),
+        parts=st.integers(2, 8),
+        seed=st.integers(0, 10_000),
+    )
+    def test_property_invariants(self, n, parts, seed):
+        rng = np.random.default_rng(seed)
+        e = max(n, 2 * n)
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        for name in ("powerlaw", "random", "range", "hash"):
+            p = partition_by_name(name, src, dst, n, parts)
+            # every vertex/edge on a valid engine; counts sum to totals
+            assert p.vertex_counts().sum() == n
+            assert p.edge_counts().sum() == e
+            # rank is a valid sorted-position
+            assert ((0 <= p.rank) & (p.rank < max(n, 1))).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(parts=st.integers(2, 16), seed=st.integers(0, 100))
+    def test_powerlaw_balance_bound(self, parts, seed):
+        """Cyclic deal over the degree sort keeps edge imbalance ≤ the
+        heaviest hub share + 1/P of the remainder (loose 2× bound here)."""
+        g = rmat(256, 4096, seed=seed)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, parts)
+        assert p.edge_balance() <= 2.0
+
+
+class TestDegreeStats:
+    def test_powerlaw_fit_positive_alpha(self):
+        g = rmat(2000, 30_000, seed=0)
+        alpha = fit_power_law(out_degrees(g.src, g.num_nodes))
+        assert alpha > 0.5
+
+    def test_skew_matches_paper_fig4(self):
+        """≤35% of vertices cover ≥90% of edges on an RMAT graph (Fig. 4's
+        skew; real SNAP graphs are even more skewed)."""
+        g = rmat(5000, 100_000, seed=1)
+        stats = skew_stats(out_degrees(g.src, g.num_nodes))
+        assert stats.frac_vertices_for_90pct_edges <= 0.35
+
+    def test_hub_set_small(self):
+        g = rmat(1000, 20_000, seed=2)
+        hubs = hub_set(out_degrees(g.src, g.num_nodes), edge_coverage=0.5)
+        assert hubs.size <= 0.05 * g.num_nodes + 1
+
+    def test_uniform_graph_not_powerlaw(self):
+        from repro.graph.generators import uniform_random
+
+        g = uniform_random(2000, 20_000, seed=0)
+        stats = skew_stats(out_degrees(g.src, g.num_nodes))
+        assert stats.frac_vertices_for_90pct_edges > 0.4

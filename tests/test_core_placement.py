@@ -1,0 +1,131 @@
+"""Algorithms 3/4: placement + ILP — correctness against brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
+from repro.core.partition import powerlaw_partition, random_partition
+from repro.core.placement import (
+    Placement,
+    brute_force_placement,
+    columnar_placement,
+    greedy_placement,
+    ilp_placement,
+    place,
+    quad_placement,
+    random_placement,
+    two_opt,
+)
+from repro.core.traffic import traffic_from_partition
+from repro.graph.generators import rmat
+
+
+def small_instance(n_shards=6, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n_shards, n_shards)) * (rng.random((n_shards, n_shards)) < 0.4)
+    np.fill_diagonal(w, 0)
+    return w
+
+
+class TestTopologies:
+    def test_mesh_distance_is_l1(self):
+        t = Mesh2D(3, 3)
+        d = t.distance_matrix()
+        assert d[0, 8] == 4  # (0,0) -> (2,2)
+        assert (d == d.T).all() and (np.diag(d) == 0).all()
+
+    def test_fbutterfly_max_two_hops(self):
+        t = FlattenedButterfly(4, 4)
+        assert t.distance_matrix().max() == 2  # one hop per differing dim
+
+    def test_torus_wraparound(self):
+        t = Torus2D(4, 4)
+        assert t.distance_matrix()[0, 3] == 1  # wrap x
+
+    def test_torus3d_num_nodes(self):
+        assert Torus3D(2, 4, 4).num_nodes == 32
+
+
+class TestPlacementOptimality:
+    def test_ilp_matches_brute_force(self):
+        w = small_instance(5)
+        topo = Mesh2D(3, 2)
+        ilp = ilp_placement(w, topo, time_limit=30)
+        brute = brute_force_placement(w, topo)
+        sym = w + w.T
+        assert ilp.weighted_hops(sym) == pytest.approx(brute.weighted_hops(sym), rel=1e-9)
+
+    def test_greedy_2opt_near_ilp(self):
+        w = small_instance(6, seed=3)
+        topo = Mesh2D(3, 3)
+        ilp = ilp_placement(w, topo, time_limit=30)
+        g2 = two_opt(greedy_placement(w, topo), w, iters=3000)
+        sym = w + w.T
+        assert g2.weighted_hops(sym) <= 1.3 * ilp.weighted_hops(sym) + 1e-9
+
+    def test_two_opt_never_worse(self):
+        w = small_instance(8, seed=5)
+        topo = Mesh2D(4, 4)
+        r = random_placement(8, topo, seed=1)
+        improved = two_opt(r, w, iters=2000)
+        sym = w + w.T
+        assert improved.weighted_hops(sym) <= r.weighted_hops(sym) + 1e-9
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_quad_placement_unit_distance(self, seed):
+        """Quad layout puts each rank's 4 communicating shards at L1
+        distance 1 — the paper's regularity constraint at its optimum."""
+        g = rmat(64, 512, seed=seed)
+        P = 4
+        part = powerlaw_partition(g.src, g.dst, g.num_nodes, P)
+        traffic = traffic_from_partition(part, g.src, g.dst)
+        topo = Mesh2D(4, 4)
+        q = quad_placement(P, topo)
+        fij = traffic.binary_fij(part)
+        # every f_ij=1 pair sits at distance 1
+        d = topo.distance_matrix()
+        s = q.site
+        ii, jj = np.nonzero(np.triu(fij))
+        assert (d[s[ii], s[jj]] == 1).all()
+
+    def test_columnar_satisfies_paper_constraints(self):
+        """Algorithm 3: ET row band on top, eprop on bottom, v* interior."""
+        from repro.core.traffic import EPROP, ET, VPROP, VTEMP
+
+        P = 4
+        topo = Mesh2D(4, 4)
+        c = columnar_placement(P, topo)
+        coords = topo.coords()[c.site].reshape(4, P, 2)  # (struct, part, xy)
+        assert coords[ET][:, 1].min() > coords[VPROP][:, 1].max() - 4  # banded
+        assert (coords[ET][:, 1] > coords[EPROP][:, 1]).all()
+
+    def test_placement_rejects_collisions(self):
+        topo = Mesh2D(2, 2)
+        with pytest.raises(ValueError):
+            Placement(topo, np.array([0, 0, 1]), "bad")
+
+
+class TestEndToEndMapping:
+    def test_paper_beats_random_hops(self, rmat_graph):
+        """Fig. 5: proposed placement reduces byte-weighted average hops vs
+        the randomized baseline."""
+        g = rmat_graph
+        from repro.core.mapping import map_graph
+
+        opt = map_graph(g.src, g.dst, g.num_nodes, 8)
+        base = map_graph(
+            g.src, g.dst, g.num_nodes, 8, partitioner="random", placement_method="random"
+        )
+        h_opt = opt.placement.average_hops(opt.traffic.bytes_matrix)
+        h_base = base.placement.average_hops(base.traffic.bytes_matrix)
+        assert h_opt < h_base
+
+    def test_device_mapper_never_regresses(self, rmat_graph):
+        from repro.core.mapping import DeviceMapper
+
+        g = rmat_graph
+        m = DeviceMapper((4, 4))
+        perm, part, h_opt, h_id = m.device_permutation(g.src, g.dst, g.num_nodes)
+        assert sorted(perm) == list(range(16))
+        assert h_opt <= h_id + 1e-12

@@ -1,0 +1,250 @@
+"""Model zoo: transformer (dense/MoE, decode≡forward), GNNs, DCN-v2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.models.moe import MoEConfig, expert_device_permutation, load_balance_loss
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return tfm.TransformerConfig(
+        "tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=128, dtype=jnp.float32,
+    )
+
+
+class TestTransformer:
+    def test_forward_shapes_and_finite(self, tiny_cfg):
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128)
+        logits = tfm.forward(p, toks, tiny_cfg)
+        assert logits.shape == (2, 16, 128)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_scan_equals_unrolled(self, tiny_cfg):
+        import dataclasses
+
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128)
+        a = tfm.forward(p, toks, tiny_cfg)
+        cfg2 = dataclasses.replace(tiny_cfg, scan_layers=False)
+        b = tfm.forward(p, toks, cfg2)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_decode_matches_forward(self, tiny_cfg):
+        """Autoregressive decode step-by-step == teacher-forced forward."""
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(2), (2, 8), 0, 128)
+        full = tfm.forward(p, toks, tiny_cfg)  # (2, 8, V)
+        cache = tfm.init_kv_cache(tiny_cfg, 2, 8, dtype=jnp.float32)
+        outs = []
+        for i in range(8):
+            lg, cache = tfm.decode_step(p, cache, jnp.int32(i), toks[:, i : i + 1], tiny_cfg)
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(dec, full, rtol=2e-3, atol=2e-3)
+
+    def test_prefill_matches_decode_tail(self, tiny_cfg):
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(3), (2, 8), 0, 128)
+        cache = tfm.init_kv_cache(tiny_cfg, 2, 8, dtype=jnp.float32)
+        lg, _ = tfm.prefill(p, toks, cache, tiny_cfg)
+        full = tfm.forward(p, toks, tiny_cfg)
+        np.testing.assert_allclose(lg, full[:, -1], rtol=2e-3, atol=2e-3)
+
+    def test_batched_pos_decode_matches_scalar(self, tiny_cfg):
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(4), (2, 6), 0, 128)
+        cache = tfm.init_kv_cache(tiny_cfg, 2, 8, dtype=jnp.float32)
+        for i in range(5):
+            lg_a, cache = tfm.decode_step(p, cache, jnp.int32(i), toks[:, i : i + 1], tiny_cfg)
+        lg_b, _ = tfm.decode_step_batched_pos(
+            p, cache, jnp.full((2,), 5, jnp.int32), toks[:, 5:6], tiny_cfg
+        )
+        lg_s, _ = tfm.decode_step(p, cache, jnp.int32(5), toks[:, 5:6], tiny_cfg)
+        np.testing.assert_allclose(lg_b, lg_s, rtol=2e-3, atol=2e-3)
+
+    def test_loss_decreases(self, tiny_cfg):
+        from repro.train.loop import make_train_step
+        from repro.train.optim import adamw
+
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        init, step = make_train_step(lambda pp, b: tfm.loss_fn(pp, b, tiny_cfg), adamw(3e-3))
+        state = init(p)
+        toks = jax.random.randint(jax.random.key(5), (4, 16), 0, 128)
+        batch = {"tokens": toks, "labels": toks}
+        losses = []
+        for _ in range(12):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] * 0.8
+
+    def test_num_params_accounting(self, tiny_cfg):
+        p = tfm.init_params(tiny_cfg, jax.random.key(0))
+        real = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+        assert real == tiny_cfg.num_params
+
+
+class TestMoE:
+    def test_moe_forward_and_aux(self):
+        cfg = tfm.TransformerConfig(
+            "m", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+            dtype=jnp.float32,
+            moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32, d_ff_shared=32),
+        )
+        p = tfm.init_params(cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 8), 0, 64)
+        logits = tfm.forward(p, toks, cfg)
+        assert bool(jnp.isfinite(logits).all())
+        assert cfg.num_active_params < cfg.num_params
+
+    def test_load_balance_loss_bounds(self):
+        probs = jnp.full((64, 8), 1 / 8)
+        idx = jnp.tile(jnp.arange(8)[:8], 8).reshape(64, 1) % 8
+        lb = load_balance_loss(probs, idx, 8)
+        assert float(lb) == pytest.approx(1.0, rel=1e-5)  # perfect balance → 1
+
+    def test_expert_placement_reduces_hops(self):
+        rng = np.random.default_rng(0)
+        counts = rng.zipf(1.3, size=(16, 64)).astype(float)  # skewed routing
+        perm, stats = expert_device_permutation(counts, 16)
+        assert sorted(perm) == list(range(16))
+        assert stats["hops_optimized"] <= stats["hops_identity"] + 1e-12
+
+
+class TestGnnModels:
+    def _batch(self, n=40, e=120, d=8, classes=5, seed=0):
+        ks = jax.random.split(jax.random.key(seed), 4)
+        return dict(
+            x=jax.random.normal(ks[0], (n, d)),
+            src=jax.random.randint(ks[1], (e,), 0, n).astype(jnp.int32),
+            dst=jax.random.randint(ks[2], (e,), 0, n).astype(jnp.int32),
+            edge_mask=jnp.ones(e, bool),
+            node_mask=jnp.ones(n, bool),
+            labels=jax.random.randint(ks[3], (n,), 0, classes),
+            train_mask=jnp.ones(n, bool),
+        )
+
+    @pytest.mark.parametrize("kind,kw", [
+        ("gin", {}),
+        ("gat", dict(n_heads=4)),
+        ("pna", dict(aggregators=("mean", "max", "min", "std"),
+                     scalers=("identity", "amplification", "attenuation"))),
+    ])
+    def test_forward_and_grad(self, kind, kw):
+        cfg = gnn_lib.GnnConfig(kind, kind, n_layers=2, d_hidden=16, d_in=8, d_out=5, **kw)
+        p = gnn_lib.init_params(cfg, jax.random.key(0))
+        b = self._batch()
+        out = gnn_lib.forward(p, b, cfg)
+        assert out.shape == (40, 5) and bool(jnp.isfinite(out).all())
+        g = jax.grad(lambda pp: gnn_lib.loss_fn(pp, b, cfg))(p)
+        assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+    def test_padded_edges_inert(self):
+        """Masked padding edges must not change the output (dry-run honesty)."""
+        cfg = gnn_lib.GnnConfig("gin", "gin", n_layers=2, d_hidden=16, d_in=8, d_out=5)
+        p = gnn_lib.init_params(cfg, jax.random.key(0))
+        b = self._batch()
+        out1 = gnn_lib.forward(p, b, cfg)
+        n, e = 40, 120
+        b2 = dict(b)
+        b2["src"] = jnp.concatenate([b["src"], jnp.full(30, n, jnp.int32)])
+        b2["dst"] = jnp.concatenate([b["dst"], jnp.full(30, n, jnp.int32)])
+        b2["edge_mask"] = jnp.concatenate([b["edge_mask"], jnp.zeros(30, bool)])
+        out2 = gnn_lib.forward(p, b2, cfg)
+        np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+    def test_gat_attention_normalised(self):
+        """Edge softmax sums to 1 over each destination's in-edges."""
+        from repro.models.gnn import segment_softmax
+
+        scores = jax.random.normal(jax.random.key(0), (20,))
+        seg = jax.random.randint(jax.random.key(1), (20,), 0, 5)
+        alpha = segment_softmax(scores, seg, 6, jnp.ones(20, bool))
+        sums = jax.ops.segment_sum(alpha, seg, num_segments=6)
+        present = jax.ops.segment_sum(jnp.ones(20), seg, num_segments=6) > 0
+        np.testing.assert_allclose(np.where(present, sums, 1.0), 1.0, rtol=1e-5)
+
+    def test_graphcast_epd(self):
+        plan = gnn_lib.graphcast_mesh_plan(300, 6)
+        assert plan["n_mesh"] <= 300
+        cfg = gnn_lib.GnnConfig("gc", "graphcast", n_layers=2, d_hidden=16,
+                                d_in=8, d_out=8, task="regression", n_vars=8)
+        p = gnn_lib.init_params(cfg, jax.random.key(0))
+        M = plan["n_mesh"]
+        ks = jax.random.split(jax.random.key(1), 10)
+        def ed(i, e, ns, nd):
+            return (jax.random.randint(ks[i], (e,), 0, ns).astype(jnp.int32),
+                    jax.random.randint(ks[i+1], (e,), 0, nd).astype(jnp.int32))
+        gs, gd = ed(0, plan["e_g2m"], 300, M)
+        ms, md = ed(2, plan["e_m2m"], M, M)
+        xs, xd = ed(4, plan["e_m2g"], M, 300)
+        b = dict(
+            x=jax.random.normal(ks[6], (300, 8)), mesh_x=jax.random.normal(ks[7], (M, 3)),
+            g2m_src=gs, g2m_dst=gd, g2m_feat=jnp.zeros((plan["e_g2m"], 4)),
+            g2m_mask=jnp.ones(plan["e_g2m"], bool),
+            m2m_src=ms, m2m_dst=md, m2m_feat=jnp.zeros((plan["e_m2m"], 4)),
+            m2m_mask=jnp.ones(plan["e_m2m"], bool),
+            m2g_src=xs, m2g_dst=xd, m2g_feat=jnp.zeros((plan["e_m2g"], 4)),
+            m2g_mask=jnp.ones(plan["e_m2g"], bool),
+            labels=jax.random.normal(ks[8], (300, 8)), node_mask=jnp.ones(300, bool),
+        )
+        out = gnn_lib.forward(p, b, cfg)
+        assert out.shape == (300, 8) and bool(jnp.isfinite(out).all())
+
+
+class TestRecsys:
+    def test_forward_loss_grad(self):
+        cfg = rec_lib.DcnConfig(rows_per_table=256, n_sparse=6, n_dense=4, mlp_dims=(32, 16))
+        p = rec_lib.init_params(cfg, jax.random.key(0))
+        b = dict(
+            dense=jax.random.normal(jax.random.key(1), (8, 4)),
+            sparse_ids=jax.random.randint(jax.random.key(2), (8, 6), 0, 256),
+            labels=jax.random.randint(jax.random.key(3), (8,), 0, 2).astype(jnp.float32),
+        )
+        assert rec_lib.forward(p, b, cfg).shape == (8,)
+        g = jax.grad(lambda pp: rec_lib.loss_fn(pp, b, cfg))(p)
+        assert float(jnp.abs(g["tables"]).sum()) > 0
+
+    def test_multi_hot_bags(self):
+        cfg = rec_lib.DcnConfig(rows_per_table=64, n_sparse=3, n_dense=2,
+                                mlp_dims=(16,), multi_hot=4)
+        p = rec_lib.init_params(cfg, jax.random.key(0))
+        b = dict(
+            dense=jax.random.normal(jax.random.key(1), (4, 2)),
+            sparse_ids=jax.random.randint(jax.random.key(2), (4, 3, 4), 0, 64),
+            labels=jnp.zeros(4),
+        )
+        assert bool(jnp.isfinite(rec_lib.forward(p, b, cfg)).all())
+
+    def test_cross_layer_identity_at_zero_weights(self):
+        """x_{l+1} = x0 ⊙ (Wx + b) + x — zero W,b ⇒ identity."""
+        cfg = rec_lib.DcnConfig(rows_per_table=64, n_sparse=2, n_dense=2,
+                                n_cross_layers=1, mlp_dims=(8,))
+        p = rec_lib.init_params(cfg, jax.random.key(0))
+        p["cross"][0]["w"] = jnp.zeros_like(p["cross"][0]["w"])
+        p["cross"][0]["b"] = jnp.zeros_like(p["cross"][0]["b"])
+        from repro.models.recsys import _cross_layer
+
+        x0 = jax.random.normal(jax.random.key(1), (4, cfg.d_input))
+        np.testing.assert_allclose(_cross_layer(p["cross"][0], x0, x0), x0)
+
+    def test_retrieval_topk(self):
+        cfg = rec_lib.DcnConfig(rows_per_table=64, n_sparse=2, n_dense=2, mlp_dims=(16,))
+        p = rec_lib.init_params(cfg, jax.random.key(0))
+        b = dict(
+            dense=jax.random.normal(jax.random.key(1), (2, 2)),
+            sparse_ids=jax.random.randint(jax.random.key(2), (2, 2), 0, 64),
+        )
+        cands = jax.random.normal(jax.random.key(3), (1000, 16))
+        vals, idx = rec_lib.retrieval_scores(p, b, cands, cfg, top_k=7)
+        assert vals.shape == (2, 7)
+        # top-k really is the max: compare against full scoring
+        u = rec_lib.user_tower(p, b, cfg)
+        full = cands @ u[0]
+        assert float(vals[0, 0]) == pytest.approx(float(full.max()), rel=1e-5)

@@ -1,0 +1,105 @@
+"""Traffic extraction (Fig. 3) + trace-driven simulator (Figs. 5/7/8)."""
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_graph
+from repro.core.partition import powerlaw_partition, random_partition
+from repro.core.replication import plan_replication
+from repro.core.simulator import SimParams, compare, simulate
+from repro.core.traffic import EPROP, ET, VPROP, VTEMP, traffic_from_partition
+from repro.graph.algorithms import bfs_program, pagerank_program, sssp_program
+from repro.graph.generators import rmat
+from repro.graph.vertex_program import run_traced
+
+
+class TestTrafficMatrix:
+    def test_phase_bytes_fig3_shape(self, small_powerlaw):
+        """Process ≈ Reduce bytes; Apply negligible (paper Fig. 3)."""
+        g = small_powerlaw
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)
+        t = traffic_from_partition(p, g.src, g.dst)
+        assert t.phase_bytes["process"] == pytest.approx(t.phase_bytes["reduce"])
+        assert t.phase_bytes["apply"] < 0.3 * t.phase_bytes["process"]
+
+    def test_total_scales_with_activity(self, small_powerlaw):
+        g = small_powerlaw
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)
+        act = np.full(g.num_edges, 3.0)
+        t1 = traffic_from_partition(p, g.src, g.dst)
+        t3 = traffic_from_partition(p, g.src, g.dst, edge_activity=act)
+        assert t3.phase_bytes["process"] == pytest.approx(3 * t1.phase_bytes["process"])
+
+    def test_binary_fij_is_paper_structure(self, small_powerlaw):
+        g = small_powerlaw
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 3)
+        t = traffic_from_partition(p, g.src, g.dst)
+        f = t.binary_fij(p)
+        # 4 undirected pairs per part: (ET,vp),(ET,vt),(ep,vp),(ep,vt)
+        assert f.sum() == 2 * 4 * 3
+        assert (f == f.T).all()
+
+    def test_traced_activity_feeds_traffic(self, small_powerlaw):
+        """The GraphMAT-equivalent path: run BFS, trace per-edge activity,
+        build the traffic matrix from the actual execution."""
+        g = small_powerlaw
+        tr = run_traced(g, bfs_program(), source=0)
+        assert tr.num_iterations >= 1
+        assert tr.edge_activity.shape == (g.num_edges,)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)
+        t = traffic_from_partition(p, g.src, g.dst, edge_activity=tr.edge_activity)
+        assert t.total_bytes() > 0
+
+
+class TestSimulator:
+    def _traffic(self, g, parts=8):
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, parts)
+        return p, traffic_from_partition(p, g.src, g.dst)
+
+    def test_result_fields_positive(self, rmat_graph):
+        m = map_graph(rmat_graph.src, rmat_graph.dst, rmat_graph.num_nodes, 8)
+        r = m.simulate()
+        assert r.exec_time_s > 0 and r.energy_j > 0 and r.avg_hops > 0
+
+    def test_fewer_hops_is_faster_and_cheaper(self, rmat_graph):
+        """The paper's core causal chain: lower hop count ⇒ lower time and
+        energy, everything else fixed."""
+        g = rmat_graph
+        opt = map_graph(g.src, g.dst, g.num_nodes, 8, seed=0)
+        base = map_graph(
+            g.src, g.dst, g.num_nodes, 8, partitioner="random", placement_method="random"
+        )
+        res = compare(opt.traffic, opt.placement, base.placement)
+        assert res["hop_decrease"] > 1.0
+        assert res["speedup"] > 1.0
+        assert res["energy_ratio"] > 1.0
+
+    def test_paper_speedup_band_2d_mesh(self):
+        """Fig. 7 band: 2–5× speedup vs randomized baseline on a 2-D mesh at
+        the paper's scale regime (we accept ≥1.5 on small graphs; the
+        benchmark suite reproduces the full-size numbers)."""
+        g = rmat(2000, 30_000, seed=11)
+        tr = run_traced(g, pagerank_program(), source=0, max_iterations=30)
+        opt = map_graph(g.src, g.dst, g.num_nodes, 16, edge_activity=tr.edge_activity)
+        base = map_graph(
+            g.src, g.dst, g.num_nodes, 16,
+            partitioner="random", placement_method="random",
+            edge_activity=tr.edge_activity,
+        )
+        res = compare(opt.traffic, opt.placement, base.placement, num_iterations=tr.num_iterations)
+        assert res["speedup"] >= 1.5
+
+    def test_energy_composition(self, rmat_graph):
+        m = map_graph(rmat_graph.src, rmat_graph.dst, rmat_graph.num_nodes, 8)
+        r = m.simulate()
+        assert r.energy_j == pytest.approx(
+            r.e_network_j + r.e_compute_j + SimParams().e_static_w * r.exec_time_s, rel=1e-6
+        )
+
+
+class TestReplication:
+    def test_hub_replication_saves_bytes_on_powerlaw(self):
+        g = rmat(1000, 20_000, seed=4)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 16)
+        plan = plan_replication(p, g.src, g.dst, avg_hops=3.0)
+        assert plan.num_hubs > 0
+        assert plan.net_saved_bytes > 0

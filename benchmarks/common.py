@@ -1,39 +1,78 @@
-"""Shared benchmark harness: Table-2 workloads (scaled), traced algorithm
-executions, and the CSV reporting contract (name,us_per_call,derived)."""
+"""Shared benchmark harness — thin front-end over `repro.experiments`.
+
+The figure benchmarks (fig3/5/7/8) are adapters over ONE shared sweep of the
+paper grid (`repro.experiments.sweep.run_sweep`): traces are content-hash
+cached on disk and all configurations are evaluated in a single batched
+`simulate_batch` call, instead of the per-config Python loops this module
+used to drive.  The CSV reporting contract (`name,us_per_call,derived`) is
+unchanged.
+
+Environment knobs (used by the smoke tests and CI):
+  BENCH_SCALE  workload scale (default 0.01 of published Table-2 sizes)
+  BENCH_PARTS  engines per config (default 16, the paper's setting)
+  BENCH_CACHE  sweep cache dir (default artifacts/sweep_cache; "" disables)
+"""
 from __future__ import annotations
 
+import dataclasses
 import functools
+import os
 import time
 
-import numpy as np
-
-from repro.graph.algorithms import bfs_program, pagerank_program, prepare_graph, sssp_program
+from repro.experiments.grid import GRIDS
+from repro.experiments.sweep import run_sweep, workload_stats
 from repro.graph.generators import table2_workloads
-from repro.graph.vertex_program import run_traced
 
 # Offline container: Table 2 graphs are regenerated as RMAT at `SCALE` of the
-# published |V|/|E| (DESIGN.md §2) — the skew (Fig. 4) is preserved, which is
-# what every downstream figure depends on.
-SCALE = 0.01
+# published |V|/|E| — the skew (Fig. 4) is preserved, which is what every
+# downstream figure depends on (EXPERIMENTS.md §Calibration).
+SCALE = float(os.environ.get("BENCH_SCALE", "0.01"))
+PARTS = int(os.environ.get("BENCH_PARTS", "16"))
+CACHE_DIR = os.environ.get("BENCH_CACHE", "artifacts/sweep_cache") or None
 
-ALGS = {
-    "bfs": bfs_program,
-    "sssp": sssp_program,
-    "pagerank": pagerank_program,
-}
+ALG_NAMES = ("bfs", "sssp", "pagerank")
 
 
 @functools.lru_cache(maxsize=None)
-def workloads(scale: float = SCALE):
+def _workloads(scale: float):
     return table2_workloads(scale=scale)
 
 
+def workloads(scale: float | None = None):
+    # Normalised before the lru_cache so workloads() and workloads(SCALE)
+    # share one entry (and one set of generated graphs).
+    return _workloads(SCALE if scale is None else scale)
+
+
 @functools.lru_cache(maxsize=None)
-def traced(graph_name: str, alg: str, scale: float = SCALE):
+def paper_sweep(scale: float | None = None, parts: int | None = None):
+    """The one sweep behind fig3/5/7/8 — run once, shared by every module."""
+    scale = SCALE if scale is None else scale
+    parts = PARTS if parts is None else parts
+    grid = dataclasses.replace(
+        GRIDS["paper"],
+        scale=scale,
+        parts=(parts,),
+        # "auto" placement solves tiny instances (≤4 parts) with the exact
+        # MILP — right for tests of optimality, wrong for a timed benchmark.
+        placements=("auto" if parts > 4 else "quad", "random"),
+    )
+    return run_sweep(
+        grid, cache_dir=CACHE_DIR, measure_serial=False, graphs=workloads(scale)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def traced(graph_name: str, alg: str, scale: float | None = None):
+    """(prepared graph, TraceResult) through the content-hash sweep cache."""
+    from repro.experiments.cache import SweepCache
+    from repro.experiments.sweep import DEFAULT_TRACE_ITERS, TRACE_ITERS
+    from repro.graph.algorithms import prepare_graph
+
     g = workloads(scale)[graph_name]
-    g = prepare_graph(alg, g)
-    max_it = 40 if alg == "pagerank" else 200
-    return g, run_traced(g, ALGS[alg](), source=0, max_iterations=max_it)
+    cache = SweepCache(CACHE_DIR)
+    tr = cache.trace(g, alg, max_iterations=TRACE_ITERS.get(alg, DEFAULT_TRACE_ITERS))
+    return prepare_graph(alg, g), tr
 
 
 def timed(fn, *args, repeats: int = 3, **kw):
@@ -47,3 +86,17 @@ def timed(fn, *args, repeats: int = 3, **kw):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+__all__ = [
+    "SCALE",
+    "PARTS",
+    "CACHE_DIR",
+    "ALG_NAMES",
+    "workloads",
+    "workload_stats",
+    "paper_sweep",
+    "traced",
+    "timed",
+    "emit",
+]

@@ -1,22 +1,21 @@
-"""Fig. 3: on-chip data movement per phase, normalised by graph size."""
-from repro.core.partition import powerlaw_partition
-from repro.core.traffic import traffic_from_partition
-
-from benchmarks.common import ALGS, emit, timed, traced, workloads
+"""Fig. 3: on-chip data movement per phase, normalised by graph size.
+Thin adapter: phase bytes come from the shared sweep's per-config records
+(traffic is partition-dependent but placement/topology-independent, so one
+record per (workload, algorithm) under the proposed scheme is the figure)."""
+from benchmarks.common import emit, paper_sweep
 
 
 def run():
-    for gname in workloads():
-        for alg in ALGS:
-            g, tr = traced(gname, alg)
-            p = powerlaw_partition(g.src, g.dst, g.num_nodes, 16)
-            t, us = timed(
-                traffic_from_partition, p, g.src, g.dst, edge_activity=tr.edge_activity
-            )
-            graph_bytes = (g.num_edges * 2 + g.num_nodes) * 8  # ET + props @ 8B words
-            norm = t.normalized_by(graph_bytes)
-            emit(
-                f"fig3_movement/{gname}/{alg}", us,
-                f"process={norm['process']:.2f};reduce={norm['reduce']:.2f};"
-                f"apply={norm['apply']:.3f};iters={tr.num_iterations}",
-            )
+    sweep = paper_sweep()
+    seen = set()
+    for r in sweep.records:
+        c = r.config
+        if c.is_baseline or (c.workload, c.algorithm) in seen:
+            continue
+        seen.add((c.workload, c.algorithm))
+        norm = r.phase_norm
+        emit(
+            f"fig3_movement/{c.workload}/{c.algorithm}", r.elapsed_us,
+            f"process={norm['process']:.2f};reduce={norm['reduce']:.2f};"
+            f"apply={norm['apply']:.3f};iters={r.num_iterations}",
+        )

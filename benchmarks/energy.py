@@ -1,30 +1,15 @@
-"""Fig. 8: energy-consumption reduction of the proposed mapping."""
-from repro.core.mapping import map_graph
-from repro.core.noc import FlattenedButterfly
-from repro.core.placement import auto_mesh_for_parts
+"""Fig. 8: energy-consumption reduction of the proposed mapping.
+Thin adapter over the shared sweep's proposed-vs-baseline comparisons."""
+from repro.experiments.sweep import figure_comparisons
 
-from benchmarks.common import ALGS, emit, timed, traced, workloads
-
-PARTS = 16
+from benchmarks.common import emit, paper_sweep
 
 
 def run():
-    m = auto_mesh_for_parts(PARTS)
-    topos = {"mesh2d": m, "fbutterfly": FlattenedButterfly(m.kx, m.ky)}
-    for gname in workloads():
-        for alg in ALGS:
-            g, tr = traced(gname, alg)
-            for tname, topo in topos.items():
-                def compare_once():
-                    opt = map_graph(g.src, g.dst, g.num_nodes, PARTS, topology=topo,
-                                    edge_activity=tr.edge_activity)
-                    base = map_graph(g.src, g.dst, g.num_nodes, PARTS, topology=topo,
-                                     partitioner="random", placement_method="random",
-                                     edge_activity=tr.edge_activity)
-                    return opt.compare_to(base, num_iterations=tr.num_iterations)
-
-                res, us = timed(compare_once, repeats=1)
-                emit(
-                    f"fig8_energy/{gname}/{alg}/{tname}", us,
-                    f"energy_ratio={res['energy_ratio']:.2f}x",
-                )
+    sweep = paper_sweep()
+    for c in figure_comparisons(sweep.records):
+        emit(
+            f"fig8_energy/{c['workload']}/{c['algorithm']}/{c['topology']}",
+            c["elapsed_us"],
+            f"energy_ratio={c['energy_ratio']:.2f}x",
+        )

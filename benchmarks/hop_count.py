@@ -1,24 +1,18 @@
-"""Fig. 5: average hop count — proposed placement vs randomized baseline."""
-from repro.core.mapping import map_graph
+"""Fig. 5: average hop count — proposed placement vs randomized baseline.
+Thin adapter over the shared sweep's proposed-vs-baseline comparisons."""
+from repro.experiments.sweep import figure_comparisons
 
-from benchmarks.common import emit, timed, traced, workloads
+from benchmarks.common import emit, paper_sweep
 
 
 def run():
-    for gname in workloads():
-        g, tr = traced(gname, "pagerank")
-        opt, us = timed(
-            map_graph, g.src, g.dst, g.num_nodes, 16,
-            edge_activity=tr.edge_activity, repeats=1,
-        )
-        base = map_graph(
-            g.src, g.dst, g.num_nodes, 16, partitioner="random",
-            placement_method="random", edge_activity=tr.edge_activity,
-        )
-        h_opt = opt.placement.average_hops(opt.traffic.bytes_matrix)
-        h_base = base.placement.average_hops(base.traffic.bytes_matrix)
+    sweep = paper_sweep()
+    for c in figure_comparisons(sweep.records):
+        if c["algorithm"] != "pagerank" or c["topology"] != "mesh2d":
+            continue
         emit(
-            f"fig5_hops/{gname}", us,
-            f"hops_proposed={h_opt:.2f};hops_random={h_base:.2f};"
-            f"decrease={h_base / max(h_opt, 1e-9):.2f}x",
+            f"fig5_hops/{c['workload']}", c["elapsed_us"],
+            f"hops_proposed={c['avg_hops_optimized']:.2f};"
+            f"hops_random={c['avg_hops_baseline']:.2f};"
+            f"decrease={c['hop_decrease']:.2f}x",
         )

@@ -1,14 +1,44 @@
 """Benchmark runner — one section per paper figure/table.
-Prints ``name,us_per_call,derived`` CSV (assignment contract)."""
+Prints ``name,us_per_call,derived`` CSV (assignment contract).
+
+    PYTHONPATH=src python benchmarks/run.py                 # every section
+    PYTHONPATH=src python benchmarks/run.py --only skew,hop_count
+
+Figure sections share one batched sweep of the paper grid
+(`repro.experiments`); `BENCH_SCALE`/`BENCH_PARTS`/`BENCH_CACHE` shrink it
+for smoke tests (see benchmarks/common.py).
+"""
+import argparse
+import os
 import sys
 
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the repo
+# root (one level up) is what makes `benchmarks.*` importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def main() -> None:
-    from benchmarks import data_movement, energy, hop_count, kernels_bench, skew, speedup
+MODULES = ("skew", "data_movement", "hop_count", "speedup", "energy", "kernels_bench")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--only",
+        default=None,
+        help=f"comma-separated subset of sections to run (options: {','.join(MODULES)})",
+    )
+    args = ap.parse_args(argv)
+    selected = MODULES if args.only is None else tuple(args.only.split(","))
+    unknown = set(selected) - set(MODULES)
+    if unknown:
+        ap.error(f"unknown sections: {sorted(unknown)}; options: {','.join(MODULES)}")
+
+    import importlib
 
     print("name,us_per_call,derived")
-    for mod in (skew, data_movement, hop_count, speedup, energy, kernels_bench):
-        mod.run()
+    for name in selected:
+        importlib.import_module(f"benchmarks.{name}").run()
 
 
 if __name__ == "__main__":

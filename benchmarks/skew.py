@@ -1,15 +1,14 @@
-"""Fig. 4: power-law skew of the Table-2 workloads (n(d) ∝ 1/d^α)."""
-from repro.core.degree import out_degrees, skew_stats
-
-from benchmarks.common import emit, timed, workloads
+"""Fig. 4: power-law skew of the Table-2 workloads (n(d) ∝ 1/d^α).
+Thin adapter over `repro.experiments.sweep.workload_stats`."""
+from benchmarks.common import emit, timed, workload_stats, workloads
 
 
 def run():
     for name, g in workloads().items():
-        deg = out_degrees(g.src, g.num_nodes)
-        stats, us = timed(skew_stats, deg)
+        stats, us = timed(workload_stats, name, g)
         emit(
             f"fig4_skew/{name}", us,
-            f"alpha={stats.alpha:.2f};frac_v_for_90pct_e="
-            f"{stats.frac_vertices_for_90pct_edges:.3f};is_power_law={stats.is_power_law}",
+            f"alpha={stats['alpha']:.2f};frac_v_for_90pct_e="
+            f"{stats['frac_vertices_for_90pct_edges']:.3f};"
+            f"is_power_law={stats['is_power_law']}",
         )

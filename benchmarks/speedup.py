@@ -1,38 +1,16 @@
 """Fig. 7: execution-time speedup of the proposed mapping, 2-D mesh and
-flattened butterfly, per algorithm per workload."""
-from repro.core.mapping import map_graph
-from repro.core.noc import FlattenedButterfly, Mesh2D
-from repro.core.placement import auto_mesh_for_parts
+flattened butterfly, per algorithm per workload.
+Thin adapter over the shared sweep's proposed-vs-baseline comparisons."""
+from repro.experiments.sweep import figure_comparisons
 
-from benchmarks.common import ALGS, emit, timed, traced, workloads
-
-PARTS = 16
-
-
-def _topos():
-    m = auto_mesh_for_parts(PARTS)
-    return {"mesh2d": m, "fbutterfly": FlattenedButterfly(m.kx, m.ky)}
+from benchmarks.common import emit, paper_sweep
 
 
 def run():
-    for gname in workloads():
-        for alg in ALGS:
-            g, tr = traced(gname, alg)
-            for tname, topo in _topos().items():
-                def compare_once():
-                    opt = map_graph(
-                        g.src, g.dst, g.num_nodes, PARTS, topology=topo,
-                        edge_activity=tr.edge_activity,
-                    )
-                    base = map_graph(
-                        g.src, g.dst, g.num_nodes, PARTS, topology=topo,
-                        partitioner="random", placement_method="random",
-                        edge_activity=tr.edge_activity,
-                    )
-                    return opt.compare_to(base, num_iterations=tr.num_iterations)
-
-                res, us = timed(compare_once, repeats=1)
-                emit(
-                    f"fig7_speedup/{gname}/{alg}/{tname}", us,
-                    f"speedup={res['speedup']:.2f}x;hop_decrease={res['hop_decrease']:.2f}x",
-                )
+    sweep = paper_sweep()
+    for c in figure_comparisons(sweep.records):
+        emit(
+            f"fig7_speedup/{c['workload']}/{c['algorithm']}/{c['topology']}",
+            c["elapsed_us"],
+            f"speedup={c['speedup']:.2f}x;hop_decrease={c['hop_decrease']:.2f}x",
+        )

@@ -1,0 +1,44 @@
+"""Batched experiment-sweep subsystem (EXPERIMENTS.md generator).
+
+One declarative grid (workload × algorithm × partitioner × placement ×
+topology × mesh size) drives the whole paper evaluation:
+
+  grid     — `GridSpec` / `SweepConfig` and the named grids (`paper`, `mini`,
+             `ablation`) that expand into concrete configurations.
+  cache    — content-hash cache for algorithm traces and traffic matrices so
+             repeated sweeps skip re-tracing.
+  batched  — the vectorized evaluation hot path: `simulate()` and placement
+             scoring batched over all configurations at once (stacked
+             `(n_configs, 4P, 4P)` tensors; `jax.jit` backend with a NumPy
+             fallback).  Exactly equivalent to `repro.core.simulator.simulate`
+             per config (tested).
+  sweep    — orchestration: expand the grid, trace (cached), partition,
+             place, batch-evaluate, pair proposed-vs-baseline rows into the
+             paper's Fig. 5/7/8 comparisons.
+  report   — renders sweep results (plus any launch.dryrun / launch.perf
+             artifacts) into EXPERIMENTS.md and BENCH_sweep.json.
+  run      — CLI: `python -m repro.experiments.run --grid paper`.
+"""
+from repro.experiments.batched import (
+    batched_weighted_hops,
+    routing_operator,
+    simulate_batch,
+)
+from repro.experiments.cache import SweepCache
+from repro.experiments.grid import GRIDS, GridSpec, SweepConfig, grid_by_name
+from repro.experiments.sweep import SweepRecord, SweepResult, figure_comparisons, run_sweep
+
+__all__ = [
+    "GRIDS",
+    "GridSpec",
+    "SweepConfig",
+    "grid_by_name",
+    "SweepCache",
+    "simulate_batch",
+    "batched_weighted_hops",
+    "routing_operator",
+    "SweepRecord",
+    "SweepResult",
+    "run_sweep",
+    "figure_comparisons",
+]

@@ -1,0 +1,201 @@
+"""Content-hash cache for algorithm traces and traffic matrices.
+
+Tracing (run_traced: a Python loop of jitted sweeps recording per-edge
+activity) dominates sweep wall time, and every figure re-uses the same
+(workload, algorithm) trace under several partitioner/topology settings.
+The cache keys on the *content* of the inputs — a digest of the edge list
+plus the full parameterisation — so a regenerated-but-identical graph hits,
+and any change to the generator, scale, seed or algorithm misses.
+
+Two levels:
+  trace   (graph, algorithm, max_iterations, source)         → TraceResult
+  traffic (graph, trace, partitioner, parts, model, packet)  → TrafficMatrix
+
+Entries are .npz files under `root/` named by the hex digest; `stats` counts
+hits/misses so tests (and the §Perf table) can show cache effectiveness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import weakref
+
+import numpy as np
+
+from repro.core.partition import Partition, partition_by_name
+from repro.core.traffic import TrafficMatrix, traffic_from_partition
+from repro.graph.structs import HostGraph
+from repro.graph.vertex_program import TraceResult
+
+__all__ = ["SweepCache", "CacheStats", "graph_digest"]
+
+
+def graph_digest(g: HostGraph) -> str:
+    """Content hash of a COO graph (shape + edge list + weights)."""
+    h = hashlib.sha256()
+    h.update(f"n={g.num_nodes};e={g.num_edges}".encode())
+    h.update(np.ascontiguousarray(g.src, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.dst, dtype=np.int64).tobytes())
+    if g.weight is not None:
+        h.update(np.ascontiguousarray(g.weight, dtype=np.float32).tobytes())
+    return h.hexdigest()
+
+
+def _key(kind: str, meta: dict) -> str:
+    blob = json.dumps({"kind": kind, **meta}, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    trace_hits: int = 0
+    trace_misses: int = 0
+    traffic_hits: int = 0
+    traffic_misses: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class SweepCache:
+    """Disk-backed content-hash cache.  `root=None` disables persistence
+    (everything is recomputed; stats still count misses)."""
+
+    def __init__(self, root: str | os.PathLike | None):
+        self.root = os.fspath(root) if root is not None else None
+        if self.root is not None:
+            os.makedirs(self.root, exist_ok=True)
+        self.stats = CacheStats()
+        self._graph_digests: dict[int, str] = {}  # id(graph) memo per process
+
+    # ------------------------------------------------------------------ util
+    def _digest_of(self, g: HostGraph) -> str:
+        """Per-object digest memo.  Keyed by id(), which is only safe while
+        the graph is alive — a finalizer evicts the entry on collection so a
+        recycled id can never return another graph's digest."""
+        key = id(g)
+        d = self._graph_digests.get(key)
+        if d is None:
+            d = graph_digest(g)
+            try:
+                weakref.finalize(g, self._graph_digests.pop, key, None)
+            except TypeError:  # not weakref-able: skip the memo entirely
+                return d
+            self._graph_digests[key] = d
+        return d
+
+    def _path(self, key: str) -> str | None:
+        return None if self.root is None else os.path.join(self.root, key + ".npz")
+
+    # ----------------------------------------------------------------- trace
+    def trace(
+        self,
+        g: HostGraph,
+        algorithm: str,
+        *,
+        source: int = 0,
+        max_iterations: int = 200,
+    ) -> TraceResult:
+        """Load or compute the communication trace of `algorithm` on `g`."""
+        key = _key(
+            "trace",
+            {
+                "graph": self._digest_of(g),
+                "alg": algorithm,
+                "source": source,
+                "max_iterations": max_iterations,
+            },
+        )
+        path = self._path(key)
+        if path is not None and os.path.exists(path):
+            with np.load(path) as z:
+                self.stats.trace_hits += 1
+                return TraceResult(
+                    props=z["props"],
+                    num_iterations=int(z["num_iterations"]),
+                    edge_activity=z["edge_activity"],
+                    vertex_activity=z["vertex_activity"],
+                    frontier_sizes=list(z["frontier_sizes"]),
+                )
+        self.stats.trace_misses += 1
+        # Imported lazily: tracing pulls in jax, which cache-only consumers
+        # (e.g. report re-rendering) do not need.
+        from repro.graph.algorithms import ALGORITHMS, prepare_graph
+        from repro.graph.vertex_program import run_traced
+
+        prepared = prepare_graph(algorithm, g)
+        tr = run_traced(
+            prepared, ALGORITHMS[algorithm](), source=source, max_iterations=max_iterations
+        )
+        if path is not None:
+            np.savez_compressed(
+                path,
+                props=tr.props,
+                num_iterations=np.int64(tr.num_iterations),
+                edge_activity=tr.edge_activity,
+                vertex_activity=tr.vertex_activity,
+                frontier_sizes=np.asarray(tr.frontier_sizes, dtype=np.int64),
+            )
+        return tr
+
+    # --------------------------------------------------------------- traffic
+    def traffic(
+        self,
+        g: HostGraph,
+        partition: Partition,
+        trace: TraceResult,
+        *,
+        model: str = "paper",
+        packet_bytes: int = 8,
+    ) -> TrafficMatrix:
+        """Load or compute the shard-to-shard traffic matrix for one config."""
+        key = _key(
+            "traffic",
+            {
+                "graph": self._digest_of(g),
+                "partition": hashlib.sha256(
+                    partition.vertex_part.tobytes() + partition.edge_part.tobytes()
+                ).hexdigest(),
+                "parts": partition.num_parts,
+                "activity": hashlib.sha256(trace.edge_activity.tobytes()).hexdigest(),
+                "model": model,
+                "packet_bytes": packet_bytes,
+            },
+        )
+        path = self._path(key)
+        if path is not None and os.path.exists(path):
+            with np.load(path) as z:
+                self.stats.traffic_hits += 1
+                return TrafficMatrix(
+                    num_parts=int(z["num_parts"]),
+                    bytes_matrix=z["bytes_matrix"],
+                    phase_bytes={k: float(z[f"phase_{k}"]) for k in ("process", "reduce", "apply")},
+                )
+        self.stats.traffic_misses += 1
+        t = traffic_from_partition(
+            partition,
+            g.src,
+            g.dst,
+            edge_activity=trace.edge_activity,
+            vertex_activity=trace.vertex_activity,
+            packet_bytes=packet_bytes,
+            model=model,
+        )
+        if path is not None:
+            np.savez_compressed(
+                path,
+                num_parts=np.int64(t.num_parts),
+                bytes_matrix=t.bytes_matrix,
+                **{f"phase_{k}": np.float64(v) for k, v in t.phase_bytes.items()},
+            )
+        return t
+
+    # -------------------------------------------------------------- partition
+    def partition(
+        self, g: HostGraph, partitioner: str, num_parts: int, **kw
+    ) -> Partition:
+        """Partitions are cheap to recompute; kept here only so sweep code has
+        one entry point per derived artifact (no disk round-trip)."""
+        return partition_by_name(partitioner, g.src, g.dst, g.num_nodes, num_parts, **kw)

@@ -1,0 +1,164 @@
+"""Declarative sweep grids: the config space behind every paper figure.
+
+A `GridSpec` is the cross product
+    workload × algorithm × (partitioner, placement) × topology × mesh size
+expanded into frozen `SweepConfig` cells.  The paper's figures compare the
+proposed scheme (powerlaw partition + optimised placement) against the
+randomized baseline on the same (workload, algorithm, topology, parts) cell,
+so the named `paper` grid pairs the two schemes; `ablation` crosses the
+scheme axes fully (e.g. powerlaw partition under random placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+__all__ = ["SweepConfig", "GridSpec", "GRIDS", "grid_by_name", "PAPER_SCALE"]
+
+# Offline container default: Table 2 graphs regenerated as R-MAT at 1% of the
+# published |V|/|E| (skew is scale-invariant under R-MAT; EXPERIMENTS.md
+# §Calibration reports the measured skew at the scale used).
+PAPER_SCALE = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """One fully-specified experiment cell."""
+
+    workload: str  # Table-2 graph name (graph.generators.WORKLOADS)
+    algorithm: str  # bfs | sssp | pagerank
+    partitioner: str  # core.partition.PARTITIONERS key
+    placement: str  # core.placement.place method (auto|random|quad|greedy|...)
+    topology: str  # mesh2d | fbutterfly
+    num_parts: int  # engines; NoC has 4·num_parts routers
+    scale: float = PAPER_SCALE
+    seed: int = 0
+
+    @property
+    def key(self) -> str:
+        return (
+            f"{self.workload}/{self.algorithm}/{self.partitioner}+{self.placement}"
+            f"/{self.topology}/P{self.num_parts}"
+        )
+
+    @property
+    def is_baseline(self) -> bool:
+        """The paper's baseline configuration: random partition + random map."""
+        return self.partitioner == "random" and self.placement == "random"
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Axes of one sweep.  `pair_schemes=True` zips (partitioners, placements)
+    into matched schemes instead of crossing them (the paper's proposed-vs-
+    baseline comparison); False takes the full product (ablations)."""
+
+    name: str
+    workloads: tuple[str, ...]
+    algorithms: tuple[str, ...]
+    partitioners: tuple[str, ...]
+    placements: tuple[str, ...]
+    topologies: tuple[str, ...] = ("mesh2d",)
+    parts: tuple[int, ...] = (16,)
+    scale: float = PAPER_SCALE
+    pair_schemes: bool = True
+    seed: int = 0
+
+    def schemes(self) -> tuple[tuple[str, str], ...]:
+        if self.pair_schemes:
+            return tuple(zip(self.partitioners, self.placements))
+        return tuple(itertools.product(self.partitioners, self.placements))
+
+    def expand(self) -> list[SweepConfig]:
+        return [
+            SweepConfig(
+                workload=w,
+                algorithm=a,
+                partitioner=pt,
+                placement=pl,
+                topology=t,
+                num_parts=p,
+                scale=self.scale,
+                seed=self.seed,
+            )
+            for w, a, (pt, pl), t, p in itertools.product(
+                self.workloads, self.algorithms, self.schemes(), self.topologies, self.parts
+            )
+        ]
+
+    @property
+    def num_configs(self) -> int:
+        return (
+            len(self.workloads)
+            * len(self.algorithms)
+            * len(self.schemes())
+            * len(self.topologies)
+            * len(self.parts)
+        )
+
+
+_TABLE2 = ("amazon", "soc-pokec", "wiki", "ljournal")
+_ALGS = ("bfs", "sssp", "pagerank")
+_PROPOSED_VS_BASELINE = dict(
+    partitioners=("powerlaw", "random"), placements=("auto", "random"), pair_schemes=True
+)
+
+GRIDS: dict[str, GridSpec] = {
+    # Figs. 5/7/8: all Table-2 workloads × all algorithms × both topologies,
+    # proposed scheme vs the randomized baseline, 16 engines (8×8 NoC).
+    "paper": GridSpec(
+        name="paper",
+        workloads=_TABLE2,
+        algorithms=_ALGS,
+        topologies=("mesh2d", "fbutterfly"),
+        parts=(16,),
+        **_PROPOSED_VS_BASELINE,
+    ),
+    # CI-sized 2-config sweep (scripts/verify.sh): one workload, one
+    # algorithm, proposed vs baseline on a tiny graph.  Placement is pinned
+    # to quad+2opt — "auto" would route this 16-shard instance to the exact
+    # MILP, which is minutes of HiGHS for no extra fidelity in CI.
+    "mini": GridSpec(
+        name="mini",
+        workloads=("amazon",),
+        algorithms=("bfs",),
+        partitioners=("powerlaw", "random"),
+        placements=("quad", "random"),
+        topologies=("mesh2d",),
+        parts=(4,),
+        scale=0.001,
+        pair_schemes=True,
+    ),
+    # Scheme ablation: full partitioner × placement product at two mesh sizes
+    # (e.g. powerlaw partition under random placement isolates Algorithm 2
+    # from Algorithms 3/4).
+    "ablation": GridSpec(
+        name="ablation",
+        workloads=("amazon", "wiki"),
+        algorithms=("pagerank",),
+        partitioners=("powerlaw", "hash", "random"),
+        placements=("auto", "random"),
+        topologies=("mesh2d",),
+        parts=(8, 16),
+        pair_schemes=False,
+    ),
+    # Mesh-size scaling of the proposed scheme's gains.
+    "meshscale": GridSpec(
+        name="meshscale",
+        workloads=("amazon", "soc-pokec"),
+        algorithms=("pagerank",),
+        topologies=("mesh2d", "fbutterfly"),
+        parts=(9, 16, 25),
+        **_PROPOSED_VS_BASELINE,
+    ),
+}
+
+
+def grid_by_name(name: str, *, scale: float | None = None) -> GridSpec:
+    try:
+        grid = GRIDS[name]
+    except KeyError:
+        raise ValueError(f"unknown grid {name!r}; options: {sorted(GRIDS)}") from None
+    if scale is not None:
+        grid = dataclasses.replace(grid, scale=scale)
+    return grid

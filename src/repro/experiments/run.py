@@ -1,0 +1,66 @@
+"""Sweep CLI — regenerates the paper's figure tables and EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.experiments.run --grid paper
+    PYTHONPATH=src python -m repro.experiments.run --grid mini \
+        --md /tmp/EXPERIMENTS.mini.md --json /tmp/BENCH_sweep.mini.json
+
+Writes `EXPERIMENTS.md` (human evidence record: §Calibration, §Dry-run,
+§Roofline, §Perf, Fig. 5/7/8 tables) and `BENCH_sweep.json` (machine-readable
+per-config records + comparisons).  Completes offline; traces are cached
+under `--cache-dir` so repeated sweeps skip re-tracing.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.experiments.grid import GRIDS, grid_by_name
+from repro.experiments.report import write_outputs
+from repro.experiments.sweep import run_sweep
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.experiments.run", description="batched experiment sweep"
+    )
+    ap.add_argument("--grid", default="paper", choices=sorted(GRIDS), help="named config grid")
+    ap.add_argument("--scale", type=float, default=None, help="override the grid's workload scale")
+    ap.add_argument(
+        "--backend", default="auto", choices=["auto", "jax", "numpy"], help="batched-eval backend"
+    )
+    ap.add_argument("--md", default="EXPERIMENTS.md", help="markdown report output path")
+    ap.add_argument("--json", default="BENCH_sweep.json", help="machine-readable output path")
+    ap.add_argument("--cache-dir", default="artifacts/sweep_cache", help="trace/traffic cache")
+    ap.add_argument("--no-cache", action="store_true", help="recompute everything")
+    ap.add_argument(
+        "--no-serial-check",
+        action="store_true",
+        help="skip timing the replaced serial simulate() loop (faster, no §Perf ratio)",
+    )
+    ap.add_argument("--dryrun-artifacts", default="artifacts/dryrun")
+    ap.add_argument("--perf-artifacts", default="artifacts/perf")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    grid = grid_by_name(args.grid, scale=args.scale)
+    sweep = run_sweep(
+        grid,
+        cache_dir=None if args.no_cache else args.cache_dir,
+        backend=args.backend,
+        measure_serial=not args.no_serial_check,
+        progress=None if args.quiet else print,
+    )
+    md_path, json_path = write_outputs(
+        sweep,
+        md_path=args.md,
+        json_path=args.json,
+        dryrun_dir=args.dryrun_artifacts,
+        perf_dir=args.perf_artifacts,
+    )
+    if not args.quiet:
+        n = len(sweep.records)
+        print(f"[sweep:{grid.name}] wrote {md_path} and {json_path} ({n} configs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

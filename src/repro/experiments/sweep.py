@@ -1,0 +1,276 @@
+"""Sweep orchestration: expand a grid, trace (cached), partition, place, and
+batch-evaluate every configuration; pair proposed-vs-baseline rows into the
+paper's Fig. 5/7/8 comparisons.
+
+The per-config pipeline matches `repro.core.mapping.map_graph` exactly —
+partition → traffic → placement — but tracing goes through the content-hash
+`SweepCache` and the final `simulate()` calls are replaced by one
+`simulate_batch` over the whole grid (the vectorized hot path).  When
+`measure_serial=True` the replaced one-config-at-a-time loop is also timed so
+EXPERIMENTS.md §Perf can report the batching win on real sweep shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.degree import out_degrees, skew_stats
+from repro.core.placement import Placement, auto_mesh_for_parts, place
+from repro.core.simulator import SimParams, SimResult
+from repro.experiments.batched import resolve_backend, simulate_batch, simulate_serial
+from repro.experiments.cache import SweepCache
+from repro.experiments.grid import GridSpec, SweepConfig
+from repro.graph.generators import table2_workloads
+
+__all__ = ["SweepRecord", "SweepResult", "run_sweep", "figure_comparisons", "workload_stats"]
+
+# Trace length per algorithm (same budget as benchmarks/): PageRank converges
+# by L1 delta well before 40 sweeps at these scales; BFS/SSSP stop on an
+# empty frontier.
+TRACE_ITERS = {"pagerank": 40}
+DEFAULT_TRACE_ITERS = 200
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRecord:
+    """One evaluated configuration."""
+
+    config: SweepConfig
+    num_nodes: int
+    num_edges: int
+    num_iterations: int
+    placement_method: str  # resolved method ("auto" → quad+2opt etc.)
+    edge_balance: float
+    phase_norm: dict[str, float]  # Fig. 3 phase bytes / graph bytes
+    result: SimResult
+    elapsed_us: float  # partition+traffic+placement + batched-sim share
+
+    def to_dict(self) -> dict:
+        return {
+            **dataclasses.asdict(self.config),
+            "key": self.config.key,
+            "num_nodes": self.num_nodes,
+            "num_edges": self.num_edges,
+            "num_iterations": self.num_iterations,
+            "placement_method": self.placement_method,
+            "edge_balance": self.edge_balance,
+            "phase_norm": self.phase_norm,
+            "elapsed_us": self.elapsed_us,
+            **{f"sim_{k}": v for k, v in dataclasses.asdict(self.result).items()},
+        }
+
+
+@dataclasses.dataclass
+class SweepResult:
+    grid: GridSpec
+    records: list[SweepRecord]
+    workload_stats: dict[str, dict]
+    cache_stats: dict[str, int]
+    timings: dict[str, float]
+    backend: str
+
+    def to_dict(self) -> dict:
+        return {
+            "grid": dataclasses.asdict(self.grid),
+            "backend": self.backend,
+            "records": [r.to_dict() for r in self.records],
+            "comparisons": figure_comparisons(self.records),
+            "workload_stats": self.workload_stats,
+            "cache_stats": self.cache_stats,
+            "timings": self.timings,
+        }
+
+
+def workload_stats(name: str, g) -> dict:
+    s = skew_stats(out_degrees(g.src, g.num_nodes))
+    return {
+        "workload": name,
+        "num_nodes": g.num_nodes,
+        "num_edges": g.num_edges,
+        "alpha": s.alpha,
+        "frac_vertices_for_90pct_edges": s.frac_vertices_for_90pct_edges,
+        "frac_edges_in_top10pct_vertices": s.frac_edges_in_top10pct_vertices,
+        "gini": s.gini,
+        "max_degree": s.max_degree,
+        "mean_degree": s.mean_degree,
+        "is_power_law": s.is_power_law,
+    }
+
+
+def run_sweep(
+    grid: GridSpec,
+    *,
+    cache: SweepCache | None = None,
+    cache_dir: str | None = None,
+    backend: str = "auto",
+    params: SimParams = SimParams(),
+    measure_serial: bool = True,
+    graphs: dict[str, object] | None = None,
+    progress: Callable[[str], None] | None = None,
+) -> SweepResult:
+    """Run every configuration of `grid` and return per-config records.
+
+    `cache`/`cache_dir` control trace/traffic persistence (`None`+`None`
+    recomputes everything).  `measure_serial` additionally times the replaced
+    per-config `simulate()` loop for the §Perf batching comparison.
+    `graphs` supplies pre-built workload graphs (name → HostGraph) so callers
+    that already generated them (benchmarks/common.py) don't pay generation
+    twice; the caller is responsible for them matching `grid.scale`/`seed`.
+    """
+    t_start = time.perf_counter()
+    say = progress or (lambda _msg: None)
+    if cache is None:
+        cache = SweepCache(cache_dir)
+    configs = grid.expand()
+    # Resolve "auto" once per sweep from the stacked problem size so the
+    # reported backend is the one actually used (auto meshes have exactly
+    # 4·num_parts routers).
+    problem_size = sum((4 * c.num_parts) ** 2 for c in configs)
+    backend = resolve_backend(backend, problem_size)
+
+    say(f"[sweep:{grid.name}] {len(configs)} configs, backend={backend}")
+    t0 = time.perf_counter()
+    used = {c.workload for c in configs}
+    if graphs is None:
+        graphs = table2_workloads(scale=grid.scale, seed=grid.seed)
+    graphs = {k: g for k, g in graphs.items() if k in used}
+    missing = used - graphs.keys()
+    if missing:
+        raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
+    wl_stats = {k: workload_stats(k, g) for k, g in graphs.items()}
+    t_graphs = time.perf_counter() - t0
+
+    # ---- traces (content-hash cached; one per workload × algorithm) --------
+    t0 = time.perf_counter()
+    traces = {}
+    for w, a in sorted({(c.workload, c.algorithm) for c in configs}):
+        traces[(w, a)] = cache.trace(
+            graphs[w], a, max_iterations=TRACE_ITERS.get(a, DEFAULT_TRACE_ITERS)
+        )
+        say(f"[sweep:{grid.name}] traced {w}/{a}: {traces[(w, a)].num_iterations} iters")
+    t_trace = time.perf_counter() - t0
+
+    # ---- per-config partition → traffic → placement ------------------------
+    t0 = time.perf_counter()
+    partitions: dict[tuple, object] = {}
+    traffics, placements, per_config_us = [], [], []
+    for c in configs:
+        tc0 = time.perf_counter()
+        g = graphs[c.workload]
+        pkey = (c.workload, c.partitioner, c.num_parts)
+        part = partitions.get(pkey)
+        if part is None:
+            part = partitions[pkey] = cache.partition(g, c.partitioner, c.num_parts)
+        traffic = cache.traffic(g, part, traces[(c.workload, c.algorithm)])
+        topology = auto_mesh_for_parts(c.num_parts, c.topology)
+        placement = place(traffic, part, topology, method=c.placement, seed=c.seed)
+        traffics.append(traffic)
+        placements.append(placement)
+        per_config_us.append((time.perf_counter() - tc0) * 1e6)
+    t_place = time.perf_counter() - t0
+
+    # ---- batched evaluation (the vectorized hot path) ----------------------
+    iters = np.array([traces[(c.workload, c.algorithm)].num_iterations for c in configs])
+    t0 = time.perf_counter()
+    results = simulate_batch(
+        traffics, placements, params=params, num_iterations=iters, backend=backend
+    )
+    t_batched = time.perf_counter() - t0
+    if configs:
+        # The first call pays one-time costs (routing-operator construction,
+        # jit compilation on the jax backend); report the steady-state cost.
+        t0 = time.perf_counter()
+        simulate_batch(traffics, placements, params=params, num_iterations=iters, backend=backend)
+        t_batched = time.perf_counter() - t0
+    t_serial_loop = None
+    if measure_serial and configs:
+        t0 = time.perf_counter()
+        simulate_serial(traffics, placements, params=params, num_iterations=iters)
+        t_serial_loop = time.perf_counter() - t0
+        say(
+            f"[sweep:{grid.name}] batched eval {t_batched*1e3:.1f} ms vs "
+            f"serial loop {t_serial_loop*1e3:.1f} ms "
+            f"({t_serial_loop/max(t_batched, 1e-12):.1f}x)"
+        )
+
+    sim_share_us = t_batched * 1e6 / max(1, len(configs))
+    records = []
+    for c, traffic, placement, res, cfg_us in zip(
+        configs, traffics, placements, results, per_config_us
+    ):
+        g = graphs[c.workload]
+        graph_bytes = (g.num_edges * 2 + g.num_nodes) * 8  # ET + props @ 8B words
+        records.append(
+            SweepRecord(
+                config=c,
+                num_nodes=g.num_nodes,
+                num_edges=g.num_edges,
+                num_iterations=int(iters[len(records)]),
+                placement_method=placement.method,
+                edge_balance=partitions[(c.workload, c.partitioner, c.num_parts)].edge_balance(),
+                phase_norm=traffic.normalized_by(graph_bytes),
+                result=res,
+                elapsed_us=cfg_us + sim_share_us,
+            )
+        )
+
+    timings = {
+        "graphs_s": t_graphs,
+        "trace_s": t_trace,
+        "partition_place_s": t_place,
+        "batched_eval_s": t_batched,
+        "serial_eval_s": t_serial_loop,
+        "total_s": time.perf_counter() - t_start,
+    }
+    return SweepResult(
+        grid=grid,
+        records=records,
+        workload_stats=wl_stats,
+        cache_stats=cache.stats.as_dict(),
+        timings=timings,
+        backend=backend,
+    )
+
+
+def figure_comparisons(records: list[SweepRecord]) -> list[dict]:
+    """Pair each proposed-scheme record with the baseline record of the same
+    (workload, algorithm, topology, parts) cell — the ratios behind the
+    paper's Figs. 5/7/8 (`core.simulator.compare` semantics, computed from
+    the batched results)."""
+    cells: dict[tuple, dict[str, SweepRecord]] = {}
+    for r in records:
+        c = r.config
+        cell = cells.setdefault((c.workload, c.algorithm, c.topology, c.num_parts), {})
+        cell["baseline" if c.is_baseline else f"{c.partitioner}+{c.placement}"] = r
+    out = []
+    for (workload, alg, topo, parts), cell in sorted(cells.items()):
+        base = cell.get("baseline")
+        if base is None:
+            continue
+        for scheme, rec in sorted(cell.items()):
+            if scheme == "baseline":
+                continue
+            opt, b = rec.result, base.result
+            out.append(
+                {
+                    "workload": workload,
+                    "algorithm": alg,
+                    "topology": topo,
+                    "num_parts": parts,
+                    "scheme": scheme,
+                    "avg_hops_optimized": opt.avg_hops,
+                    "avg_hops_baseline": b.avg_hops,
+                    "hop_decrease": b.avg_hops / opt.avg_hops if opt.avg_hops else float("inf"),
+                    "speedup": opt.speedup_over(b),
+                    "energy_ratio": opt.energy_ratio_over(b),
+                    "time_optimized_s": opt.exec_time_s,
+                    "time_baseline_s": b.exec_time_s,
+                    "energy_optimized_j": opt.energy_j,
+                    "energy_baseline_j": b.energy_j,
+                    "elapsed_us": rec.elapsed_us + base.elapsed_us,
+                }
+            )
+    return out

@@ -120,10 +120,11 @@ def table2_workloads(
 ) -> dict[str, HostGraph]:
     """The paper's four workloads at `scale` (1.0 = published size).
 
-    Benchmarks default to scale=1/64 so a full BFS/SSSP/PR sweep stays inside
-    the CPU container budget; statistics (α, skew) are scale-invariant under
-    R-MAT so the mapping results transfer — EXPERIMENTS.md reports both the
-    scale used and the measured skew vs. Fig. 4.
+    Benchmarks and the experiment sweep default to scale=0.01 so a full
+    BFS/SSSP/PR sweep stays inside the CPU container budget; statistics
+    (α, skew) are scale-invariant under R-MAT so the mapping results transfer
+    — EXPERIMENTS.md §Calibration reports both the scale used and the
+    measured skew vs. Fig. 4.
     """
     out = {}
     for i, wl in enumerate(WORKLOADS):

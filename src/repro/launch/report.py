@@ -1,122 +1,42 @@
-"""Builds the EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+"""Prints the EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
 JSON records that launch.dryrun writes.
 
     PYTHONPATH=src python -m repro.launch.report artifacts/dryrun
+
+Thin adapter: the table builders (and the v1-record ring-factor correction)
+live in `repro.experiments.report`, the single EXPERIMENTS.md authority —
+`python -m repro.experiments.run` renders the same tables into the committed
+EXPERIMENTS.md; this CLI just previews an artifact directory.
 """
 from __future__ import annotations
 
-import glob
-import json
-import os
 import sys
 
+from repro.experiments.report import (  # noqa: F401  (re-exported for back-compat)
+    dryrun_summary,
+    dryrun_table,
+    fmt_e,
+    fmt_gb,
+    load_dryrun_records,
+    normalize_dryrun_record,
+    roofline_table,
+)
 
-def fmt_e(x):
-    return f"{x:.2e}" if x is not None else "—"
-
-
-def fmt_gb(x):
-    return f"{x/2**30:.2f}" if x is not None else "—"
-
-
-def load(out_dir: str) -> list[dict]:
-    recs = []
-    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
-        recs.append(_normalize(json.load(open(f))))
-    return recs
-
-
-def _normalize(r: dict) -> dict:
-    """Records written before the ring-factor parser (parser_v2) counted
-    all-reduce link bytes at 1× output size; the ring model is 2·(g−1)/g ≈ 2×
-    for the 16/256-way groups in these programs (no reduce-scatter appears in
-    any v1 record — verified).  Correct totals + derived terms in place."""
-    if r.get("status") != "ok" or r.get("parser_v2"):
-        return r
-    bd = r.get("coll_breakdown") or {}
-    extra = bd.get("all-reduce", 0.0)  # add one more output-size worth
-    if extra:
-        r["coll_bytes"] = r["coll_bytes"] + extra
-        bd["all-reduce"] = 2.0 * bd["all-reduce"]
-        hw_ici = 50e9
-        r["t_collective_s"] = r["coll_bytes"] / hw_ici
-        terms = {
-            "compute": r["t_compute_s"],
-            "memory": r["t_memory_s"],
-            "collective": r["t_collective_s"],
-        }
-        r["dominant"] = max(terms, key=terms.get)
-        ideal = r["model_flops"] / (r["chips"] * 197e12)
-        r["roofline_fraction"] = ideal / max(terms.values())
-    return r
-
-
-def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
-    """§Roofline: per (arch × cell), single-pod mesh only (assignment)."""
-    rows = [
-        "| arch | cell | t_compute (s) | t_memory (s) | t_coll (s) | dominant "
-        "| MODEL_FLOPS | useful/HLO | roofline frac | HBM GiB/dev |",
-        "|---|---|---|---|---|---|---|---|---|---|",
-    ]
-    for r in recs:
-        if r.get("status") != "ok" or r.get("mesh") != mesh:
-            continue
-        rows.append(
-            f"| {r['arch']} | {r['cell']} | {r['t_compute_s']:.4g} | "
-            f"{r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} | "
-            f"**{r['dominant']}** | {fmt_e(r['model_flops'])} | "
-            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
-            f"{fmt_gb(r.get('bytes_per_device'))} |"
-        )
-    return "\n".join(rows)
-
-
-def dryrun_table(recs: list[dict]) -> str:
-    """§Dry-run: every (arch × cell × mesh) status + headline numbers."""
-    rows = [
-        "| arch | cell | mesh | status | HLO FLOPs/dev | HLO bytes/dev | "
-        "coll bytes/dev | compile (s) |",
-        "|---|---|---|---|---|---|---|---|",
-    ]
-    for r in recs:
-        if r.get("status") == "SKIP":
-            rows.append(
-                f"| {r['arch']} | {r['cell']} | — | SKIP ({r['reason'][:40]}…) | — | — | — | — |"
-            )
-        elif r.get("status") == "ok":
-            rows.append(
-                f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok | "
-                f"{fmt_e(r['hlo_flops'])} | {fmt_e(r['hlo_bytes'])} | "
-                f"{fmt_e(r['coll_bytes'])} | {r.get('compile_s', 0):.0f} |"
-            )
-        else:
-            rows.append(
-                f"| {r['arch']} | {r['cell']} | {r.get('mesh','?')} | **FAIL** | — | — | — | — |"
-            )
-    return "\n".join(rows)
-
-
-def summary(recs: list[dict]) -> str:
-    ok = sum(r.get("status") == "ok" for r in recs)
-    fail = sum(r.get("status") == "FAIL" for r in recs)
-    out = [f"records: {ok} ok, {fail} fail"]
-    doms = {}
-    for r in recs:
-        if r.get("status") == "ok" and r.get("mesh") == "16x16":
-            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
-    out.append(f"dominant terms (single-pod): {doms}")
-    return "\n".join(out)
+# Back-compat aliases (pre-experiments names).
+_normalize = normalize_dryrun_record
+load = load_dryrun_records
+summary = dryrun_summary
 
 
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
-    recs = load(out_dir)
+    recs = load_dryrun_records(out_dir)
     print("## §Dry-run\n")
     print(dryrun_table(recs))
     print("\n## §Roofline (single-pod 16×16)\n")
     print(roofline_table(recs))
     print("\n## Summary\n")
-    print(summary(recs))
+    print(dryrun_summary(recs))
 
 
 if __name__ == "__main__":

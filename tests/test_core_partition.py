@@ -1,7 +1,7 @@
 """Paper core: Algorithm 2 partitioning — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.degree import fit_power_law, hub_set, out_degrees, skew_stats
 from repro.core.partition import (

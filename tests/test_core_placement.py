@@ -1,7 +1,7 @@
 """Algorithms 3/4: placement + ILP — correctness against brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
 from repro.core.partition import powerlaw_partition, random_partition

@@ -1,0 +1,97 @@
+"""Placement-search benchmark: the serial per-config `place` loop (greedy/
+quad + random-probe two_opt, Algorithms 3–4) vs the batched swap-delta engine
+(`repro.experiments.placement_batch`) on paper-grid-shaped inputs.
+
+Rows (name,us_per_call,derived):
+  placement/serial_loop     the replaced one-config-at-a-time search
+  placement/batched_numpy   stacked steepest descent, float64 BLAS backend
+  placement/batched_jax     same program under jax.jit + lax.while_loop
+Derived fields carry the speedup vs the serial loop and the max H ratio
+(batched/serial weighted hops — must stay ≤ 1.0 + fp noise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, PARTS, SCALE, emit, timed, workloads
+from repro.core.placement import auto_mesh_for_parts, place
+from repro.experiments.cache import SweepCache
+from repro.experiments.grid import GRIDS
+from repro.experiments.placement_batch import place_batch
+from repro.experiments.sweep import DEFAULT_TRACE_ITERS, TRACE_ITERS
+
+
+def _paper_inputs():
+    """(traffics, partitions, topologies, methods, seeds) for the searched
+    half of the paper grid (the proposed-scheme configs; the baseline half is
+    a constructive random layout with nothing to search)."""
+    grid = GRIDS["paper"]
+    cache = SweepCache(CACHE_DIR)
+    graphs = workloads(SCALE)
+    parts_memo: dict[tuple, object] = {}
+    traffics, partitions, topologies, methods, seeds = [], [], [], [], []
+    for c in grid.expand():
+        if c.is_baseline:
+            continue
+        g = graphs[c.workload]
+        tr = cache.trace(
+            g, c.algorithm, max_iterations=TRACE_ITERS.get(c.algorithm, DEFAULT_TRACE_ITERS)
+        )
+        pkey = (c.workload, c.partitioner)
+        part = parts_memo.get(pkey)
+        if part is None:
+            part = parts_memo[pkey] = cache.partition(g, c.partitioner, PARTS)
+        traffics.append(cache.traffic(g, part, tr))
+        partitions.append(part)
+        topologies.append(auto_mesh_for_parts(PARTS, c.topology))
+        # benchmark the search, not HiGHS: pin tiny instances to quad
+        methods.append("quad" if PARTS <= 4 else c.placement)
+        seeds.append(c.seed)
+    return traffics, partitions, topologies, methods, seeds
+
+
+def run() -> None:
+    traffics, partitions, topologies, methods, seeds = _paper_inputs()
+    n_cfg = len(traffics)
+
+    def serial():
+        return [
+            place(t, p, topo, method=m, seed=s)
+            for t, p, topo, m, s in zip(traffics, partitions, topologies, methods, seeds)
+        ]
+
+    serial_pls, us_serial = timed(serial, repeats=3)
+    emit("placement/serial_loop", us_serial, f"configs={n_cfg}")
+    h_serial = np.array(
+        [pl.weighted_hops(t.bytes_matrix) for pl, t in zip(serial_pls, traffics)]
+    )
+
+    for backend in ("numpy", "jax"):
+        if backend == "jax":
+            try:
+                import jax  # noqa: F401
+            except ImportError:
+                continue
+        (pls, stats), us = timed(
+            place_batch,
+            traffics,
+            partitions,
+            topologies,
+            methods=methods,
+            seeds=seeds,
+            backend=backend,
+            repeats=3,
+        )
+        h = np.array([pl.weighted_hops(t.bytes_matrix) for pl, t in zip(pls, traffics)])
+        ratio = float((h / np.maximum(h_serial, 1e-12)).max())
+        emit(
+            f"placement/batched_{backend}",
+            us,
+            f"speedup={us_serial / max(us, 1e-9):.2f}x;h_max_ratio={ratio:.4f}"
+            f";steps={stats.steps}",
+        )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -9,10 +9,21 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== test extras (hypothesis for the property tests) =="
+if python -c "import hypothesis" 2>/dev/null; then
+    echo "hypothesis already installed"
+elif pip install -q "hypothesis>=6" 2>/dev/null || pip install -q -e ".[test]" 2>/dev/null; then
+    echo "installed hypothesis via the [test] extra"
+else
+    echo "WARNING: hypothesis unavailable (offline container without a wheel);"
+    echo "         property tests will skip individually (tests/_hypothesis_compat.py)"
+fi
+
 echo "== gating tests (paper core + experiments) =="
 python -m pytest -x -q \
     tests/test_core_partition.py \
     tests/test_core_placement.py \
+    tests/test_placement_batch.py \
     tests/test_simulator_and_traffic.py \
     tests/test_graph_algorithms.py \
     tests/test_kernels.py \
@@ -27,7 +38,7 @@ echo "== mini sweep (2 configs) =="
 out="$(mktemp -d)"
 python -m repro.experiments.run --grid mini \
     --md "$out/EXPERIMENTS.mini.md" --json "$out/BENCH_sweep.mini.json" \
-    --cache-dir "$out/cache"
+    --cache-dir "$out/cache" --sweeps-dir "$out/sweeps"
 test -s "$out/EXPERIMENTS.mini.md"
 test -s "$out/BENCH_sweep.mini.json"
 python - "$out/BENCH_sweep.mini.json" <<'EOF'
@@ -37,7 +48,14 @@ assert payload["records"], "mini sweep produced no records"
 assert payload["comparisons"], "mini sweep produced no comparisons"
 c = payload["comparisons"][0]
 assert c["speedup"] > 1.0 and c["hop_decrease"] > 1.0, c
-print(f"mini sweep ok: speedup={c['speedup']:.2f}x hop_decrease={c['hop_decrease']:.2f}x")
+ps = payload["placement_stats"]
+assert ps["batched_configs"] >= 1, f"batched placement path not exercised: {ps}"
+assert ps["h_worse_than_serial_configs"] == 0, f"batched H worse than serial: {ps}"
+assert any(
+    "2opt[batch]" in r["placement_method"] for r in payload["records"]
+), "no record carries the batched-engine method tag"
+print(f"mini sweep ok: speedup={c['speedup']:.2f}x hop_decrease={c['hop_decrease']:.2f}x "
+      f"placement batched={ps['batched_configs']} (H ratio max {ps['h_vs_serial_max_ratio']:.4f})")
 EOF
 rm -rf "$out"
 echo "VERIFY OK"

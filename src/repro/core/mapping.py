@@ -136,7 +136,9 @@ class DeviceMapper:
         )
         merged = self.merged_traffic(traffic)
         greedy = placement_lib.greedy_placement(merged, self.topology, seed=seed)
-        placed = placement_lib.two_opt(greedy, merged, iters=4000, seed=seed)
+        # Steepest-descent refinement: converges to a full 2-opt local optimum
+        # in far fewer steps than the 4000 random probes it replaced.
+        placed = placement_lib.two_opt_best_move(greedy, merged)
         identity = Placement(self.topology, np.arange(self.num_devices), "identity")
         hops_opt = placed.average_hops(merged)
         hops_id = identity.average_hops(merged)

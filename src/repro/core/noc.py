@@ -38,6 +38,22 @@ class Topology(abc.ABC):
     def num_links(self) -> int:
         """Unidirectional link count (for serialization-throughput modelling)."""
 
+    def route_links(
+        self, c0: tuple[int, ...], c1: tuple[int, ...]
+    ) -> list[tuple[int, int, int, int]] | None:
+        """Ordered unidirectional links (x0, y0, x1, y1) of the deterministic
+        dimension-ordered route c0 → c1, or None when the topology has no
+        exact per-link routing model (the simulator then falls back to the
+        uniform-spread approximation).
+
+        This is the single source of truth for link loads: both the serial
+        simulator (`core.simulator._per_link_peak_load`) and the batched
+        routing operator (`experiments.batched.routing_operator`) consume it,
+        so the two paths cannot drift apart.  len(route_links(a, b)) equals
+        distance_matrix()[a, b] for every topology that implements it.
+        """
+        return None
+
     def distance(self, i: int, j: int) -> int:
         return int(self.distance_matrix()[i, j])
 
@@ -47,6 +63,51 @@ class Topology(abc.ABC):
         if n < 2:
             return 0.0
         return float(d.sum() / (n * (n - 1)))
+
+
+def _mesh_xy_links(c0: tuple[int, ...], c1: tuple[int, ...]) -> list[tuple[int, int, int, int]]:
+    """X-Y dimension-ordered wormhole route on a (non-wrapping) 2-D mesh:
+    |Δx| X-links at y0, then |Δy| Y-links at x1."""
+    (x0, y0), (x1, y1) = c0, c1
+    links = []
+    xstep = 1 if x1 > x0 else -1
+    for x in range(x0, x1, xstep):
+        links.append((x, y0, x + xstep, y0))
+    ystep = 1 if y1 > y0 else -1
+    for y in range(y0, y1, ystep):
+        links.append((x1, y, x1, y + ystep))
+    return links
+
+
+def _ring_route(a: int, b: int, k: int) -> tuple[int, int]:
+    """(step, hops) along a k-ring taking the shorter way; ties (diff == k/2)
+    break toward the increasing direction so routing stays deterministic."""
+    fwd = (b - a) % k
+    bwd = (a - b) % k
+    return (1, fwd) if fwd <= bwd else (-1, bwd)
+
+
+def _torus_xy_links(
+    c0: tuple[int, ...], c1: tuple[int, ...], kx: int, ky: int
+) -> list[tuple[int, int, int, int]]:
+    """Wraparound X-Y route on a 2-D torus: the shorter ring direction in X,
+    then in Y.  Hop count per dimension is min(Δ, k − Δ) — exactly the
+    `Torus2D.distance_matrix` metric, so link loads and byte-hops agree."""
+    (x0, y0), (x1, y1) = c0, c1
+    links = []
+    xstep, xhops = _ring_route(x0, x1, kx)
+    x = x0
+    for _ in range(xhops):
+        nx = (x + xstep) % kx
+        links.append((x, y0, nx, y0))
+        x = nx
+    ystep, yhops = _ring_route(y0, y1, ky)
+    y = y0
+    for _ in range(yhops):
+        ny = (y + ystep) % ky
+        links.append((x1, y, x1, ny))
+        y = ny
+    return links
 
 
 def _cached(fn):
@@ -86,6 +147,9 @@ class Mesh2D(Topology):
     def num_links(self) -> int:
         return 2 * ((self.kx - 1) * self.ky + self.kx * (self.ky - 1))
 
+    def route_links(self, c0, c1):
+        return _mesh_xy_links(c0, c1)
+
 
 @dataclasses.dataclass(frozen=True)
 class FlattenedButterfly(Topology):
@@ -122,6 +186,16 @@ class FlattenedButterfly(Topology):
         col_links = self.ky * (self.kx * (self.kx - 1))
         return row_links + col_links
 
+    def route_links(self, c0, c1):
+        # Direct link per differing dimension: X first, then Y at x1.
+        (x0, y0), (x1, y1) = c0, c1
+        links = []
+        if x0 != x1:
+            links.append((x0, y0, x1, y0))
+        if y0 != y1:
+            links.append((x1, y0, x1, y1))
+        return links
+
 
 @dataclasses.dataclass(frozen=True)
 class Torus2D(Topology):
@@ -148,6 +222,9 @@ class Torus2D(Topology):
 
     def num_links(self) -> int:
         return 2 * 2 * self.num_nodes  # 2 dims × 2 directions × nodes
+
+    def route_links(self, c0, c1):
+        return _torus_xy_links(c0, c1, self.kx, self.ky)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,7 @@ import math
 
 import numpy as np
 
-from repro.core.noc import FlattenedButterfly, Mesh2D, Topology
+from repro.core.noc import FlattenedButterfly, Mesh2D, Topology, Torus2D
 from repro.core.partition import Partition
 from repro.core.traffic import EPROP, ET, VPROP, VTEMP, TrafficMatrix
 
@@ -26,9 +26,15 @@ __all__ = [
     "columnar_placement",
     "quad_placement",
     "greedy_placement",
+    "symmetrize_weights",
+    "swap_delta_matrix",
+    "move_delta_matrix",
+    "default_max_steps",
     "two_opt",
+    "two_opt_best_move",
     "ilp_placement",
     "brute_force_placement",
+    "resolve_method",
     "place",
 ]
 
@@ -73,7 +79,7 @@ def auto_mesh_for_parts(num_parts: int, topology: str = "mesh2d") -> Topology:
     ky = n // kx
     if kx == 1 and n > 2:  # prime 4P can't happen (4P divisible by 4) but guard
         kx, ky = 2, (n + 1) // 2
-    cls = {"mesh2d": Mesh2D, "fbutterfly": FlattenedButterfly}[topology]
+    cls = {"mesh2d": Mesh2D, "fbutterfly": FlattenedButterfly, "torus2d": Torus2D}[topology]
     return cls(kx, ky)
 
 
@@ -183,6 +189,51 @@ def greedy_placement(weights: np.ndarray, topology: Topology, *, seed: int = 0) 
     return Placement(topology, placed_site, "greedy")
 
 
+def symmetrize_weights(weights: np.ndarray) -> np.ndarray:
+    """w + wᵀ with a zero diagonal — the form every search kernel expects
+    (H = ½ Σ_ij w_sym[i,j]·d[site_i, site_j] over ordered pairs)."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = w + w.T
+    np.fill_diagonal(w, 0.0)
+    return w
+
+
+def swap_delta_matrix(w: np.ndarray, d: np.ndarray, site: np.ndarray) -> np.ndarray:
+    """ΔH of *every* pairwise site swap at once.
+
+    `w` symmetric zero-diagonal (n, n), `d` (S, S), `site` (n,).  Entry
+    (i, j) is the exact change in H = `Placement.weighted_hops(raw_weights)`
+    (the undirected objective Σ_{i<j} w_ij·d(site_i, site_j) over the
+    symmetrized w) from swapping the sites of shards i and j (diagonal = 0).
+    Derivation: with
+    A[i, j] = Σ_k w[i, k]·d(site_j, site_k) (cost of i evaluated at j's site
+    against the *stale* site array), the swapped pair omits its own cross
+    term on both sides (d[s, s] = 0), so adding the swap-invariant
+    2·w_ij·d(site_i, site_j) correction makes the test exact:
+
+        Δ(i, j) = A[i, j] + A[j, i] + 2·w_ij·d_ij − A[i, i] − A[j, j]
+
+    One (n, n)·(n, n) matmul — the vectorized form of the serial two_opt
+    probe, shared by `two_opt_best_move` and the batched placement engine.
+    """
+    dss = d[np.ix_(site, site)]
+    a = w @ dss  # A[i, j]: cost of shard i at shard j's site
+    diag = np.diagonal(a)
+    delta = a + a.T + 2.0 * w * dss - diag[:, None] - diag[None, :]
+    np.fill_diagonal(delta, 0.0)
+    return delta
+
+
+def move_delta_matrix(w: np.ndarray, d: np.ndarray, site: np.ndarray) -> np.ndarray:
+    """ΔH of moving each shard to *every* router at once: entry (i, t) is the
+    exact change in H from relocating shard i to router t with all other
+    shards fixed (column site_i = 0).  The caller masks occupied routers.
+    One (n, n)·(n, S) matmul — the vectorized free-site probe of two_opt."""
+    cost_all = w @ d[:, site].T  # (n, S): cost of shard i at router t
+    cur = cost_all[np.arange(site.size), site]
+    return cost_all - cur[:, None]
+
+
 def two_opt(
     placement: Placement,
     weights: np.ndarray,
@@ -191,10 +242,15 @@ def two_opt(
     seed: int = 0,
     include_free_sites: bool = True,
 ) -> Placement:
-    """Pairwise-swap hill climbing on H; also tries moves into free routers."""
-    w = np.asarray(weights, dtype=np.float64)
-    w = w + w.T
-    np.fill_diagonal(w, 0.0)
+    """Pairwise-swap hill climbing on H; also tries moves into free routers.
+
+    One random candidate per iteration (the paper-era reference search).  The
+    accept tests are the scalar forms of `swap_delta_matrix` /
+    `move_delta_matrix`; `two_opt_best_move` and the batched engine
+    (`repro.experiments.placement_batch`) evaluate the same deltas for the
+    whole candidate set per step instead.
+    """
+    w = symmetrize_weights(weights)
     d = placement.topology.distance_matrix().astype(np.float64)
     site = placement.site.copy()
     n = site.size
@@ -211,6 +267,7 @@ def two_opt(
             t = int(rng.integers(placement.topology.num_nodes))
             if occupied[t] >= 0:
                 continue
+            # scalar move_delta_matrix[i, t] < 0
             if node_cost(i, t) < node_cost(i, site[i]):
                 occupied[site[i]] = -1
                 occupied[t] = i
@@ -220,15 +277,75 @@ def two_opt(
             if i == j:
                 continue
             si, sj = site[i], site[j]
-            # node_cost against the *stale* site array omits the i-j cross term
-            # after the swap (d[s,s]=0); both sides carry +w_ij·d_ij once the
-            # 2·w_ij·d_ij correction is added to `after`, so the test is exact
-            # (the i-j distance itself is swap-invariant).
+            # scalar swap_delta_matrix[i, j] < 0 (see its docstring for why
+            # the 2·w_ij·d_ij correction makes the stale-site test exact)
             before = node_cost(i, si) + node_cost(j, sj)
             after = node_cost(i, sj) + node_cost(j, si) + 2.0 * w[i, j] * d[si, sj]
             if after < before:
                 site[i], site[j] = sj, si
                 occupied[si], occupied[sj] = j, i
+    return Placement(placement.topology, site, placement.method + "+2opt")
+
+
+# Accept a move only if it improves H by more than this (absolute bytes·hops);
+# guards best-move descent against fp-noise cycling at convergence.
+BEST_MOVE_TOL = -1e-9
+
+
+def default_max_steps(n: int) -> int:
+    """Step budget for best-move descent at problem size n — converges in
+    < 2n steps in practice.  Shared by `two_opt_best_move` and the batched
+    engine so their default budgets (and the bit-parity between them that
+    tests assert) cannot drift."""
+    return 4 * n + 16
+
+
+def two_opt_best_move(
+    placement: Placement,
+    weights: np.ndarray,
+    *,
+    max_steps: int | None = None,
+    include_free_sites: bool = True,
+) -> Placement:
+    """Steepest-descent two_opt: per step evaluate ALL O(n²) swaps and
+    O(n·S) free-site moves via the delta matrices and apply the single best,
+    until no candidate improves H (a full 2-opt local optimum) or the step
+    budget runs out.  Deterministic (no RNG).  This is the serial reference
+    for the batched engine (`repro.experiments.placement_batch`), which runs
+    the identical recursion stacked over configs."""
+    w = symmetrize_weights(weights)
+    d = placement.topology.distance_matrix().astype(np.float64)
+    site = placement.site.copy()
+    n = site.size
+    num_sites = placement.topology.num_nodes
+    occupied = np.zeros(num_sites, dtype=bool)
+    occupied[site] = True
+    if max_steps is None:
+        max_steps = default_max_steps(n)
+    for _ in range(max_steps):
+        ds = swap_delta_matrix(w, d, site)
+        np.fill_diagonal(ds, np.inf)
+        best_swap = int(ds.argmin())
+        i_s, j_s = divmod(best_swap, n)
+        best = ds[i_s, j_s]
+        i_m = t_m = -1
+        if include_free_sites and not occupied.all():
+            dm = move_delta_matrix(w, d, site)
+            dm[:, occupied] = np.inf
+            best_move = int(dm.argmin())
+            i_m, t_m = divmod(best_move, num_sites)
+            if dm[i_m, t_m] < best:
+                best = dm[i_m, t_m]
+            else:
+                i_m = -1
+        if best >= BEST_MOVE_TOL:
+            break
+        if i_m >= 0:
+            occupied[site[i_m]] = False
+            occupied[t_m] = True
+            site[i_m] = t_m
+        else:
+            site[i_s], site[j_s] = site[j_s], site[i_s]
     return Placement(placement.topology, site, placement.method + "+2opt")
 
 
@@ -326,6 +443,20 @@ def brute_force_placement(weights: np.ndarray, topology: Topology) -> Placement:
     return Placement(topology, best_site, "brute")
 
 
+def resolve_method(num_logical: int, num_parts: int, topology: Topology, method: str) -> str:
+    """Resolve "auto" to a concrete placement method: the exact MILP for tiny
+    instances, the quad layout when 2×2 quads fit the mesh family, traffic-
+    weighted greedy otherwise.  Shared by `place` and the batched engine so
+    the two paths always pick the same search for the same config."""
+    if method != "auto":
+        return method
+    if num_logical <= 16 and topology.num_nodes <= 16:
+        return "ilp"
+    if isinstance(topology, (Mesh2D, FlattenedButterfly)) and _quad_fits(num_parts, topology):
+        return "quad"
+    return "greedy"
+
+
 def place(
     traffic: TrafficMatrix,
     partition: Partition,
@@ -343,15 +474,7 @@ def place(
     """
     weights = traffic.binary_fij(partition) if paper_faithful_fij else traffic.bytes_matrix
     n = traffic.num_logical
-    if method == "auto":
-        if n <= 16 and topology.num_nodes <= 16:
-            method = "ilp"
-        elif isinstance(topology, (Mesh2D, FlattenedButterfly)) and _quad_fits(
-            traffic.num_parts, topology
-        ):
-            method = "quad"
-        else:
-            method = "greedy"
+    method = resolve_method(n, traffic.num_parts, topology, method)
     if method == "random":
         return random_placement(n, topology, seed=seed)
     if method == "columnar":

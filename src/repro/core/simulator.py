@@ -82,12 +82,13 @@ class SimResult:
 def _per_link_peak_load(
     traffic: TrafficMatrix, placement: Placement, params: SimParams
 ) -> tuple[float, float]:
-    """(byte_hops, peak_bytes_on_one_link) under X-Y dimension-ordered routing.
+    """(byte_hops, peak_bytes_on_one_link) under the topology's exact routing.
 
-    Wormhole X-Y routing on a mesh: a flow i→j crosses |Δx| X-links then |Δy|
-    Y-links.  We accumulate per-link byte loads exactly for mesh-family
-    topologies (coords available) and fall back to a uniform-spread
-    approximation for others.
+    Per-link byte loads come from `Topology.route_links` — X-Y dimension-
+    ordered stepping on the mesh, direct per-dimension links on the flattened
+    butterfly, wraparound shortest-direction stepping on the 2-D torus — and
+    fall back to a uniform-spread approximation for topologies without an
+    exact routing model (e.g. Torus3D).
     """
     topo = placement.topology
     coords = topo.coords()
@@ -100,29 +101,11 @@ def _per_link_peak_load(
     d = topo.distance_matrix()[np.ix_(s, s)]
     flow_hops = d[ii, jj].astype(np.float64)
     byte_hops = float((w * flow_hops).sum())
-    # Per-link load (X-Y routing) for 2-D coordinate topologies:
-    if coords.shape[1] == 2:
-        from repro.core.noc import FlattenedButterfly
-
-        fb = isinstance(topo, FlattenedButterfly)
+    origin = tuple(coords[0]) if len(coords) else ()
+    if topo.route_links(origin, origin) is not None:
         link_load: dict[tuple[int, int, int, int], float] = {}
-        for (x0, y0), (x1, y1), bytes_ in zip(ci, cj, w):
-            if fb:
-                # flattened butterfly: direct link per differing dimension
-                if x0 != x1:
-                    key = (x0, y0, x1, y0)
-                    link_load[key] = link_load.get(key, 0.0) + float(bytes_)
-                if y0 != y1:
-                    key = (x1, y0, x1, y1)
-                    link_load[key] = link_load.get(key, 0.0) + float(bytes_)
-                continue
-            xstep = 1 if x1 > x0 else -1
-            for x in range(x0, x1, xstep):
-                key = (x, y0, x + xstep, y0)
-                link_load[key] = link_load.get(key, 0.0) + float(bytes_)
-            ystep = 1 if y1 > y0 else -1
-            for y in range(y0, y1, ystep):
-                key = (x1, y, x1, y + ystep)
+        for c0, c1, bytes_ in zip(ci, cj, w):
+            for key in topo.route_links(tuple(c0), tuple(c1)):
                 link_load[key] = link_load.get(key, 0.0) + float(bytes_)
         peak = max(link_load.values(), default=0.0)
     else:

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.noc import FlattenedButterfly, Topology
+from repro.core.noc import Topology
 from repro.core.placement import Placement
 from repro.core.simulator import SimParams, SimResult
 from repro.core.traffic import TrafficMatrix
@@ -71,51 +71,42 @@ def resolve_backend(backend: str = "auto", problem_size: int | None = None) -> s
 
 def routing_operator(topology: Topology):
     """(num_links_used, N·N) sparse CSR operator mapping a router-space bytes
-    matrix to per-link loads, mirroring the serial simulator's routing rules.
-    Sparse because a route touches only `hops(s,t)` of the L links (~0.5 % of
-    entries on an 8×8 mesh) — the dense matmul was the batch hot spot.
+    matrix to per-link loads, built from the same `Topology.route_links`
+    model the serial simulator uses (X-Y mesh stepping, flattened-butterfly
+    direct links, wraparound torus stepping) — so batched and serial link
+    loads cannot drift apart.  Sparse because a route touches only
+    `hops(s,t)` of the L links (~0.5 % of entries on an 8×8 mesh) — the
+    dense matmul was the batch hot spot.
 
     Returns None for topologies the serial path also approximates with the
-    uniform spread (coords not 2-D); rows cover only links that some route
-    uses — unused links carry zero load and cannot be the peak.
+    uniform spread (no exact route_links, e.g. Torus3D); rows cover only
+    links that some route uses — unused links carry zero load and cannot be
+    the peak.
     """
     cached = _ROUTING_CACHE.get(topology, "miss")
     if not isinstance(cached, str):
         return cached
     coords = topology.coords()
-    if coords.shape[1] != 2:
+    origin = tuple(coords[0]) if len(coords) else ()
+    if topology.route_links(origin, origin) is None:
         _ROUTING_CACHE[topology] = None
         return None
     n = topology.num_nodes
-    fb = isinstance(topology, FlattenedButterfly)
     link_ids: dict[tuple[int, int, int, int], int] = {}
     rows: list[int] = []
     cols: list[int] = []
 
-    def link(x0, y0, x1, y1) -> int:
-        key = (x0, y0, x1, y1)
-        lid = link_ids.get(key)
-        if lid is None:
-            lid = link_ids[key] = len(link_ids)
-        return lid
-
-    for i, (x0, y0) in enumerate(coords):
-        for j, (x1, y1) in enumerate(coords):
+    for i, c0 in enumerate(coords):
+        for j, c1 in enumerate(coords):
             if i == j:
                 continue
             pair = i * n + j
-            if fb:
-                if x0 != x1:
-                    rows.append(link(x0, y0, x1, y0)), cols.append(pair)
-                if y0 != y1:
-                    rows.append(link(x1, y0, x1, y1)), cols.append(pair)
-                continue
-            xstep = 1 if x1 > x0 else -1
-            for x in range(x0, x1, xstep):
-                rows.append(link(x, y0, x + xstep, y0)), cols.append(pair)
-            ystep = 1 if y1 > y0 else -1
-            for y in range(y0, y1, ystep):
-                rows.append(link(x1, y, x1, y + ystep)), cols.append(pair)
+            for key in topology.route_links(tuple(c0), tuple(c1)):
+                lid = link_ids.get(key)
+                if lid is None:
+                    lid = link_ids[key] = len(link_ids)
+                rows.append(lid)
+                cols.append(pair)
     from scipy import sparse
 
     op = sparse.csr_matrix(

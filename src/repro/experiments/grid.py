@@ -29,7 +29,7 @@ class SweepConfig:
     algorithm: str  # bfs | sssp | pagerank
     partitioner: str  # core.partition.PARTITIONERS key
     placement: str  # core.placement.place method (auto|random|quad|greedy|...)
-    topology: str  # mesh2d | fbutterfly
+    topology: str  # mesh2d | fbutterfly | torus2d (exact wraparound routing)
     num_parts: int  # engines; NoC has 4·num_parts routers
     scale: float = PAPER_SCALE
     seed: int = 0

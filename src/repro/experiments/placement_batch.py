@@ -1,0 +1,391 @@
+"""Batched placement-search engine: the sweep's per-config `greedy/quad +
+two_opt` Python loops (paper §5.2–5.3, Algorithms 3–4) replaced by one
+stacked tensor program.
+
+The serial search probes ONE random swap per iteration; `two_opt_best_move`
+(core.placement) evaluates the H-delta of *all* O(n²) swaps and O(n·S) free-
+site moves per step with two matmuls and applies the single best.  This
+module runs that identical recursion stacked over every sweep configuration
+at once:
+
+  Dss[c]   = D[c][site[c, :, None], site[c, None, :]]          (C, n, n)
+  A[c]     = W[c] @ Dss[c]                                     (C, n, n)
+  Δswap[c] = A + Aᵀ + 2·W⊙Dss − diag(A) ⊕ diag(A)              (C, n, n)
+  Δmove[c] = W[c] @ D[c][:, site[c]]ᵀ − diag(A)[:, :, None]    (C, n, S)
+
+then per config applies the best improving candidate and repeats until every
+config has converged to a full 2-opt local optimum (or the step budget runs
+out).  Mirroring `simulate_batch`, configs are grouped by problem shape
+(n logical shards, S routers) — each group is one stacked program; topologies
+may differ inside a group (the per-config distance matrices are stacked).
+
+Backends (via `resolve_backend`, like `simulate_batch`): "numpy" — float64
+einsums, bit-identical to `two_opt_best_move` per config; "jax" —
+`jax.jit`-compiled `jax.lax.while_loop`, weights pre-normalised per config so
+float32 on CPU keeps the accept decisions stable (~1e-6 relative H).
+
+Search quality: steepest descent converges to a local optimum of the same
+swap+move neighbourhood the serial randomized search explores, and on paper-
+grid shapes it is never worse at matched budgets (asserted in
+tests/test_placement_batch.py; measured per sweep and recorded in
+EXPERIMENTS.md §Perf).  `restarts > 0` stacks extra perturbed-init descents
+into the batch dimension (argmin H per config) to harden against the rare
+adversarial instance where a single steepest path lands high.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.noc import Topology
+from repro.core.partition import Partition
+from repro.core.placement import (
+    BEST_MOVE_TOL,
+    Placement,
+    default_max_steps,
+    greedy_placement,
+    quad_placement,
+    place,
+    resolve_method,
+    symmetrize_weights,
+)
+from repro.core.traffic import TrafficMatrix
+from repro.experiments.batched import resolve_backend
+
+__all__ = [
+    "batch_descend",
+    "place_batch",
+    "PlacementBatchStats",
+    "BATCH_SEARCH_METHODS",
+]
+
+# Methods the batched engine searches; everything else (random, columnar, the
+# exact MILP) goes through the serial `place` reference path.
+BATCH_SEARCH_METHODS = frozenset({"quad", "greedy"})
+
+# Marks a batched-engine result in `Placement.method` ("quad+2opt[batch]") —
+# scripts/verify.sh and the sweep stats key off the engine having run.
+BATCH_METHOD_SUFFIX = "+2opt[batch]"
+
+
+@dataclasses.dataclass
+class PlacementBatchStats:
+    """What the engine did for one `place_batch` call (rendered in §Perf)."""
+
+    batched_configs: int = 0
+    serial_configs: int = 0
+    groups: int = 0
+    steps: int = 0  # total best-move steps across groups (max over configs)
+    backend: str = "numpy"  # ","-joined when (n,S) groups resolve differently
+    restarts: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# numpy backend: the reference stacked recursion
+# ---------------------------------------------------------------------------
+
+
+def _deltas_numpy(w: np.ndarray, d: np.ndarray, sites: np.ndarray, occ: np.ndarray):
+    """(Δswap (C,n,n) with +inf diagonal, Δmove (C,n,S) with occupied cols
+    +inf) for a stack of configs — the batched forms of
+    `core.placement.swap_delta_matrix` / `move_delta_matrix`."""
+    c_idx = np.arange(sites.shape[0])[:, None, None]
+    dss = d[c_idx, sites[:, :, None], sites[:, None, :]]  # (C, n, n)
+    a = w @ dss  # batched BLAS gemm (np.einsum would loop)
+    diag = np.einsum("cii->ci", a)
+    ds = a + a.transpose(0, 2, 1) + 2.0 * w * dss - diag[:, :, None] - diag[:, None, :]
+    n = sites.shape[1]
+    ds[:, np.arange(n), np.arange(n)] = np.inf
+    g = d[c_idx, np.arange(d.shape[1])[None, :, None], sites[:, None, :]]  # (C, S, n)
+    dm = w @ g.transpose(0, 2, 1) - diag[:, :, None]  # (C, n, S)
+    dm[np.broadcast_to(occ[:, None, :], dm.shape)] = np.inf
+    return ds, dm
+
+
+def _descend_numpy(
+    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int
+) -> tuple[np.ndarray, int]:
+    """Steepest-descent until every config converges; returns (sites, steps).
+    Converged configs drop out of the stacked delta evaluation, so late steps
+    only pay for the stragglers."""
+    c, n = sites.shape
+    s_count = d.shape[1]
+    occ = np.zeros((c, s_count), dtype=bool)
+    np.put_along_axis(occ, sites, True, axis=1)
+    active = np.ones(c, dtype=bool)
+    steps = 0
+    for _ in range(max_steps):
+        idx = np.nonzero(active)[0]
+        if idx.size == 0:
+            break
+        steps += 1
+        ds, dm = _deltas_numpy(w[idx], d[idx], sites[idx], occ[idx])
+        best_swap = ds.reshape(idx.size, -1).argmin(axis=1)
+        best_move = dm.reshape(idx.size, -1).argmin(axis=1)
+        swap_val = ds.reshape(idx.size, -1)[np.arange(idx.size), best_swap]
+        move_val = dm.reshape(idx.size, -1)[np.arange(idx.size), best_move]
+        for k, cfg in enumerate(idx):
+            if min(swap_val[k], move_val[k]) >= BEST_MOVE_TOL:
+                active[cfg] = False
+                continue
+            if move_val[k] < swap_val[k]:
+                i, t = divmod(int(best_move[k]), s_count)
+                occ[cfg, sites[cfg, i]] = False
+                occ[cfg, t] = True
+                sites[cfg, i] = t
+            else:
+                i, j = divmod(int(best_swap[k]), n)
+                sites[cfg, i], sites[cfg, j] = sites[cfg, j], sites[cfg, i]
+    return sites, steps
+
+
+# ---------------------------------------------------------------------------
+# jax backend: the same recursion as one jitted lax.while_loop
+# ---------------------------------------------------------------------------
+
+_JAX_DESCEND = None
+
+
+def _jax_descend_fn():
+    """Build (once) the jitted batched descent; jit re-specialises per
+    (C, n, S) group shape automatically."""
+    global _JAX_DESCEND
+    if _JAX_DESCEND is not None:
+        return _JAX_DESCEND
+    import jax
+    import jax.numpy as jnp
+
+    def step_one(w, d, site, occ, tol):
+        n = site.shape[0]
+        dss = d[site[:, None], site[None, :]]
+        a = w @ dss
+        diag = jnp.diagonal(a)
+        ds = a + a.T + 2.0 * w * dss - diag[:, None] - diag[None, :]
+        ds = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, ds)
+        dm = w @ d[:, site].T - diag[:, None]
+        dm = jnp.where(occ[None, :], jnp.inf, dm)
+        bs = jnp.argmin(ds.reshape(-1))
+        bm = jnp.argmin(dm.reshape(-1))
+        sv, mv = ds.reshape(-1)[bs], dm.reshape(-1)[bm]
+        take_move = mv < sv
+        best = jnp.minimum(sv, mv)
+        i_s, j_s = jnp.divmod(bs, n)
+        i_m, t_m = jnp.divmod(bm, occ.shape[0])
+        # candidate states (both computed; selected below)
+        site_swap = site.at[i_s].set(site[j_s]).at[j_s].set(site[i_s])
+        site_move = site.at[i_m].set(t_m)
+        occ_move = occ.at[site[i_m]].set(False).at[t_m].set(True)
+        improving = best < tol
+        new_site = jnp.where(
+            improving, jnp.where(take_move, site_move, site_swap), site
+        )
+        new_occ = jnp.where(improving & take_move, occ_move, occ)
+        return new_site, new_occ, improving
+
+    v_step = jax.vmap(step_one, in_axes=(0, 0, 0, 0, None))
+
+    def descend(w, d, sites, occ, max_steps, tol):
+        def cond(state):
+            _, _, active, step = state
+            return jnp.logical_and(active.any(), step < max_steps)
+
+        def body(state):
+            sites, occ, active, step = state
+            new_sites, new_occ, improving = v_step(w, d, sites, occ, tol)
+            keep = active & improving
+            sites = jnp.where(keep[:, None], new_sites, sites)
+            occ = jnp.where(keep[:, None], new_occ, occ)
+            return sites, occ, keep, step + 1
+
+        active0 = jnp.ones(sites.shape[0], dtype=bool)
+        sites, occ, _, steps = jax.lax.while_loop(cond, body, (sites, occ, active0, 0))
+        return sites, steps
+
+    _JAX_DESCEND = jax.jit(descend, static_argnames=("max_steps",))
+    return _JAX_DESCEND
+
+
+def _descend_jax(
+    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int
+) -> tuple[np.ndarray, int]:
+    import jax.numpy as jnp
+
+    c, _ = sites.shape
+    s_count = d.shape[1]
+    occ = np.zeros((c, s_count), dtype=bool)
+    np.put_along_axis(occ, sites, True, axis=1)
+    # Normalise per config so float32 (jax CPU default) keeps accept
+    # decisions stable across the byte-scale range of real traffic; the
+    # accept tolerance is widened accordingly (relative to H ~ O(n) after
+    # normalisation) so f32 rounding noise cannot cycle the descent.
+    scale = np.maximum(w.reshape(c, -1).max(axis=1), 1.0)[:, None, None]
+    out_sites, steps = _jax_descend_fn()(
+        jnp.asarray(w / scale),
+        jnp.asarray(d, dtype=np.float32),
+        jnp.asarray(sites),
+        jnp.asarray(occ),
+        int(max_steps),
+        -1e-4,
+    )
+    return np.asarray(out_sites, dtype=np.int64), int(steps)
+
+
+# ---------------------------------------------------------------------------
+# front-ends
+# ---------------------------------------------------------------------------
+
+
+def batch_descend(
+    weights: list[np.ndarray] | np.ndarray,
+    topologies: list[Topology],
+    init_sites: list[np.ndarray] | np.ndarray,
+    *,
+    max_steps: int | None = None,
+    backend: str = "auto",
+) -> tuple[list[np.ndarray], PlacementBatchStats]:
+    """Run the stacked steepest descent for C configs of identical (n, S)
+    shape.  `weights` raw (n, n) per config (symmetrized internally),
+    `topologies` one per config (distance matrices are stacked, so mixed
+    topologies of equal size batch together), `init_sites` (n,) per config.
+    Returns refined site arrays in input order plus engine stats."""
+    w = np.stack([symmetrize_weights(wi) for wi in weights])
+    d = np.stack([t.distance_matrix().astype(np.float64) for t in topologies])
+    sites = np.stack([np.asarray(s, dtype=np.int64) for s in init_sites]).copy()
+    n = sites.shape[1]
+    if max_steps is None:
+        max_steps = default_max_steps(n)
+    backend = resolve_backend(backend, int(w.size + sites.shape[0] * n * d.shape[1]))
+    descend = _descend_jax if backend == "jax" else _descend_numpy
+    out, steps = descend(w, d, sites, max_steps)
+    stats = PlacementBatchStats(
+        batched_configs=len(topologies), groups=1, steps=steps, backend=backend
+    )
+    return list(out), stats
+
+
+def _initial_sites(
+    method: str,
+    traffic: TrafficMatrix,
+    weights: np.ndarray,
+    topology: Topology,
+    seed: int,
+) -> np.ndarray:
+    if method == "quad":
+        return quad_placement(traffic.num_parts, topology).site
+    return greedy_placement(weights, topology, seed=seed).site
+
+
+def _perturbed(init: np.ndarray, topology: Topology, *, seed) -> np.ndarray:
+    """Restart init: the primary init kicked by n/4 random transpositions
+    (plus relocations into free routers when the mesh has spares).  Stays in
+    the primary's basin's neighbourhood — a few descent steps to re-converge
+    — while giving the argmin-H selection a genuinely different path, unlike
+    a fully random init which costs ~n steps to descend."""
+    rng = np.random.default_rng(seed)
+    site = init.copy()
+    n = site.size
+    free = np.setdiff1d(np.arange(topology.num_nodes), site)
+    rng.shuffle(free)
+    for _ in range(max(2, n // 4)):
+        if free.size and rng.random() < 0.25:
+            i = int(rng.integers(n))
+            t, free[0] = int(free[0]), site[i]
+            site[i] = t
+        else:
+            i, j = rng.integers(n, size=2)
+            site[i], site[j] = site[j], site[i]
+    return site
+
+
+def place_batch(
+    traffics: list[TrafficMatrix],
+    partitions: list[Partition],
+    topologies: list[Topology],
+    *,
+    methods: list[str] | str = "auto",
+    seeds: list[int] | int = 0,
+    paper_faithful_fij: bool = False,
+    max_steps: int | None = None,
+    restarts: int = 0,
+    backend: str = "auto",
+) -> tuple[list[Placement], PlacementBatchStats]:
+    """Batched drop-in for the sweep's per-config `place(...)` loop.
+
+    Per config the method is resolved exactly as `place` resolves it
+    (`core.placement.resolve_method`); configs whose method lands in
+    `BATCH_SEARCH_METHODS` are refined by the stacked steepest-descent engine
+    (grouped by (n, S) problem shape), everything else — random/columnar
+    layouts, the exact MILP, odd topologies that only the constructive paths
+    serve — falls through to the serial `place` reference.  `restarts` extra
+    perturbed-init descents per config ride the same batch and the best H
+    wins; the default 0 keeps the stage cost at one convergence (structured
+    inits land in a 2-opt optimum within a few steps, and H-parity vs the
+    serial search is measured per sweep), while restarts ≥ 1 buys basin
+    diversity at ~n/4 extra steps per restart.
+
+    Returns placements in input order plus `PlacementBatchStats`.
+    """
+    n_cfg = len(traffics)
+    if not (n_cfg == len(partitions) == len(topologies)):
+        raise ValueError("traffics, partitions, topologies must pair up")
+    methods_l = [methods] * n_cfg if isinstance(methods, str) else list(methods)
+    seeds_l = [seeds] * n_cfg if isinstance(seeds, int) else list(seeds)
+    if not (n_cfg == len(methods_l) == len(seeds_l)):
+        raise ValueError("methods/seeds must match the config count")
+
+    results: list[Placement | None] = [None] * n_cfg
+    stats = PlacementBatchStats(restarts=restarts)
+    groups: dict[tuple[int, int], list[int]] = {}
+    weights_all: list[np.ndarray | None] = [None] * n_cfg
+    resolved: list[str] = [""] * n_cfg
+    for idx, (t, p, topo, m) in enumerate(zip(traffics, partitions, topologies, methods_l)):
+        m = resolve_method(t.num_logical, t.num_parts, topo, m)
+        resolved[idx] = m
+        if m not in BATCH_SEARCH_METHODS:
+            results[idx] = place(
+                t, p, topo, method=m, paper_faithful_fij=paper_faithful_fij, seed=seeds_l[idx]
+            )
+            stats.serial_configs += 1
+            continue
+        weights_all[idx] = t.binary_fij(p) if paper_faithful_fij else t.bytes_matrix
+        groups.setdefault((t.num_logical, topo.num_nodes), []).append(idx)
+
+    backends_used: set[str] = set()
+    for (n, _s), idxs in groups.items():
+        w_list, topo_list, init_list, owner = [], [], [], []
+        for i in idxs:
+            w_i = weights_all[i]
+            init = _initial_sites(resolved[i], traffics[i], w_i, topologies[i], seeds_l[i])
+            w_list.append(w_i)
+            topo_list.append(topologies[i])
+            init_list.append(init)
+            owner.append(i)
+            for r in range(restarts):
+                w_list.append(w_i)
+                topo_list.append(topologies[i])
+                init_list.append(_perturbed(init, topologies[i], seed=(seeds_l[i], r, i)))
+                owner.append(i)
+        sites_out, gstats = batch_descend(
+            w_list, topo_list, init_list, max_steps=max_steps, backend=backend
+        )
+        stats.steps += gstats.steps
+        backends_used.add(gstats.backend)
+        stats.backend = ",".join(sorted(backends_used))
+        stats.groups += 1
+        stats.batched_configs += len(idxs)
+        best_h: dict[int, float] = {}
+        for s_arr, i in zip(sites_out, owner):
+            pl = Placement(
+                topologies[i],
+                np.asarray(s_arr, dtype=np.int64),
+                resolved[i] + BATCH_METHOD_SUFFIX,
+            )
+            h = pl.weighted_hops(weights_all[i])
+            if i not in best_h or h < best_h[i]:
+                best_h[i] = h
+                results[i] = pl
+    return results, stats  # type: ignore[return-value]

@@ -5,16 +5,24 @@
         --md /tmp/EXPERIMENTS.mini.md --json /tmp/BENCH_sweep.mini.json
 
 Writes `EXPERIMENTS.md` (human evidence record: §Calibration, §Dry-run,
-§Roofline, §Perf, Fig. 5/7/8 tables) and `BENCH_sweep.json` (machine-readable
-per-config records + comparisons).  Completes offline; traces are cached
-under `--cache-dir` so repeated sweeps skip re-tracing.
+§Roofline, §Perf, Fig. 5/7/8, §Ablation, §Mesh-scaling tables) and
+`BENCH_sweep.json` (machine-readable per-config records + comparisons) for
+`--grid paper`; secondary grids store `artifacts/sweeps/<grid>.json`, which
+the next paper render folds in.  Completes offline; traces are cached under
+`--cache-dir` so repeated sweeps skip re-tracing.
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro.experiments.grid import GRIDS, grid_by_name
-from repro.experiments.report import write_outputs
+from repro.experiments.report import (
+    RENDERABLE_SWEEP_GRIDS,
+    save_sweep_artifact,
+    write_bench_json,
+    write_outputs,
+)
 from repro.experiments.sweep import run_sweep
 
 
@@ -27,14 +35,33 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--backend", default="auto", choices=["auto", "jax", "numpy"], help="batched-eval backend"
     )
-    ap.add_argument("--md", default="EXPERIMENTS.md", help="markdown report output path")
-    ap.add_argument("--json", default="BENCH_sweep.json", help="machine-readable output path")
+    ap.add_argument(
+        "--md",
+        default=None,
+        help="markdown report output path (default EXPERIMENTS.md for --grid"
+        " paper; other grids only store their artifacts/sweeps/<grid>.json"
+        " unless --md is given explicitly)",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        help="machine-readable output path (default BENCH_sweep.json for"
+        " --grid paper; see --md for other grids)",
+    )
     ap.add_argument("--cache-dir", default="artifacts/sweep_cache", help="trace/traffic cache")
+    ap.add_argument(
+        "--sweeps-dir",
+        default="artifacts/sweeps",
+        help="per-grid sweep artifact store rendered into EXPERIMENTS.md"
+        " (§Ablation / §Mesh scaling)",
+    )
     ap.add_argument("--no-cache", action="store_true", help="recompute everything")
     ap.add_argument(
         "--no-serial-check",
         action="store_true",
-        help="skip timing the replaced serial simulate() loop (faster, no §Perf ratio)",
+        help="skip the serial place/simulate reference loops: faster, but no"
+        " §Perf ratios and no keep-the-better-H placement guard (results come"
+        " from the batched engine alone)",
     )
     ap.add_argument("--dryrun-artifacts", default="artifacts/dryrun")
     ap.add_argument("--perf-artifacts", default="artifacts/perf")
@@ -49,16 +76,47 @@ def main(argv: list[str] | None = None) -> int:
         measure_serial=not args.no_serial_check,
         progress=None if args.quiet else print,
     )
-    md_path, json_path = write_outputs(
-        sweep,
-        md_path=args.md,
-        json_path=args.json,
-        dryrun_dir=args.dryrun_artifacts,
-        perf_dir=args.perf_artifacts,
-    )
+    artifact = None
+    if args.grid in RENDERABLE_SWEEP_GRIDS:
+        artifact = save_sweep_artifact(sweep, args.sweeps_dir)
+    # Secondary grids default to artifact-only runs: their tables land in
+    # EXPERIMENTS.md on the next `--grid paper` render rather than
+    # overwriting the paper report with a secondary grid's view.  Only an
+    # explicit --md opts a secondary grid into the full report; --json alone
+    # writes just the machine-readable payload.
+    wrote = []
+    if args.grid == "paper" or args.md is not None:
+        md_path = args.md or "EXPERIMENTS.md"
+        if args.json is not None:
+            json_path = args.json
+        elif args.grid == "paper":
+            json_path = "BENCH_sweep.json"
+        else:
+            # A secondary grid given only --md must not clobber the committed
+            # paper BENCH_sweep.json; pair the payload with the report path.
+            json_path = os.path.splitext(md_path)[0] + ".json"
+        md_path, json_path = write_outputs(
+            sweep,
+            md_path=md_path,
+            json_path=json_path,
+            dryrun_dir=args.dryrun_artifacts,
+            perf_dir=args.perf_artifacts,
+            sweeps_dir=args.sweeps_dir,
+        )
+        wrote += [md_path, json_path]
+    elif args.json is not None:
+        wrote.append(write_bench_json(sweep, args.json))
     if not args.quiet:
         n = len(sweep.records)
-        print(f"[sweep:{grid.name}] wrote {md_path} and {json_path} ({n} configs)")
+        if wrote:
+            print(f"[sweep:{grid.name}] wrote {' and '.join(wrote)} ({n} configs)")
+        elif artifact:
+            print(
+                f"[sweep:{grid.name}] stored {artifact} ({n} configs); re-run"
+                " `--grid paper` to render it into EXPERIMENTS.md"
+            )
+        else:
+            print(f"[sweep:{grid.name}] ran {n} configs (no outputs requested)")
     return 0
 
 

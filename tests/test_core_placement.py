@@ -45,6 +45,36 @@ class TestTopologies:
     def test_torus3d_num_nodes(self):
         assert Torus3D(2, 4, 4).num_nodes == 32
 
+    @pytest.mark.parametrize(
+        "topo", [Mesh2D(4, 5), FlattenedButterfly(4, 4), Torus2D(4, 4), Torus2D(5, 3)]
+    )
+    def test_route_links_length_equals_distance(self, topo):
+        """route_links is the link-level realisation of the hop metric: its
+        length equals distance_matrix and consecutive links are contiguous."""
+        c = topo.coords()
+        d = topo.distance_matrix()
+        for i in range(topo.num_nodes):
+            for j in range(topo.num_nodes):
+                links = topo.route_links(tuple(c[i]), tuple(c[j]))
+                assert len(links) == d[i, j]
+                cur = tuple(c[i])
+                for x0, y0, x1, y1 in links:
+                    assert (x0, y0) == cur
+                    cur = (x1, y1)
+                if links:
+                    assert cur == tuple(c[j])
+
+    def test_torus_route_takes_wraparound_shortcut(self):
+        t = Torus2D(4, 4)
+        assert t.route_links((0, 0), (3, 0)) == [(0, 0, 3, 0)]  # 1 hop via wrap
+        assert t.route_links((0, 3), (0, 1)) == [(0, 3, 0, 0), (0, 0, 0, 1)]
+        # equidistant both ways (Δ = k/2): deterministic forward tie-break
+        assert t.route_links((0, 1), (0, 3)) == [(0, 1, 0, 2), (0, 2, 0, 3)]
+
+    def test_torus3d_has_no_exact_routing(self):
+        t = Torus3D(2, 2, 2)
+        assert t.route_links((0, 0, 0), (0, 0, 0)) is None
+
 
 class TestPlacementOptimality:
     def test_ilp_matches_brute_force(self):

@@ -9,7 +9,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.noc import FlattenedButterfly, Mesh2D, Torus3D
+from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
 from repro.core.partition import powerlaw_partition, random_partition
 from repro.core.placement import (
     Placement,
@@ -133,6 +133,24 @@ class TestBatchedEquivalence:
         d = topo.distance_matrix()
         np.testing.assert_array_equal(per_pair, d)
 
+    @pytest.mark.parametrize("topo", [Torus2D(4, 4), Torus2D(5, 3)])
+    def test_routing_operator_matches_torus_wraparound_metric(self, topo):
+        """Torus: the operator's per-pair link count equals the wraparound
+        hop metric (ROADMAP: link loads previously stepped the long way)."""
+        op = routing_operator(topo)
+        n = topo.num_nodes
+        per_pair = np.asarray(op.sum(axis=0)).reshape(n, n)
+        np.testing.assert_array_equal(per_pair, topo.distance_matrix())
+
+    def test_torus2d_batched_matches_serial(self):
+        topo = Torus2D(4, 4)
+        traffics, placements = _configs(2, 4, topo)
+        batched = simulate_batch(traffics, placements, backend="numpy")
+        for t, p, b in zip(traffics, placements, batched):
+            s = simulate(t, p)
+            assert b.exec_time_s == pytest.approx(s.exec_time_s, rel=1e-12)
+            assert b.t_serialization_s == pytest.approx(s.t_serialization_s, rel=1e-12)
+
 
 class TestSweepCache:
     def test_trace_roundtrip_identical(self, tmp_path):
@@ -201,6 +219,13 @@ class TestGridAndSweep:
         # Batched results equal per-config simulate() on the same inputs.
         for r in res.records:
             assert r.result.exec_time_s > 0
+        # The batched placement engine ran (quad config) with H no worse
+        # than the serial two_opt search it replaces.
+        ps = res.placement_stats
+        assert ps["batched_configs"] >= 1
+        assert ps["h_worse_than_serial_configs"] == 0
+        assert ps["h_vs_serial_max_ratio"] <= 1.0 + 1e-9
+        assert any("2opt[batch]" in r.placement_method for r in res.records)
 
     def test_sweep_reuses_cache_on_second_run(self, tmp_path):
         grid = grid_by_name("mini")
@@ -227,18 +252,24 @@ class TestBenchmarkContract:
         )
         out = subprocess.run(
             [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
-             "--only", "skew,hop_count,speedup,energy"],
+             "--only", "skew,hop_count,placement,speedup,energy"],
             capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
         )
         assert out.returncode == 0, out.stderr[-2000:]
         lines = [l for l in out.stdout.splitlines() if l.strip()]
         assert lines[0] == "name,us_per_call,derived"
         body = [l for l in lines[1:] if "," in l]
-        assert len(body) >= 4 + 4 + 12 + 12  # skew + fig5 + fig7 + fig8 rows
+        assert len(body) >= 4 + 4 + 2 + 12 + 12  # skew+fig5+placement+fig7+fig8
         for line in body:
             assert CSV_ROW.match(line), line
         assert any(l.startswith("fig7_speedup/") for l in body)
         assert any(l.startswith("fig8_energy/") for l in body)
+        assert any(l.startswith("placement/serial_loop") for l in body)
+        placement_rows = [l for l in body if l.startswith("placement/batched")]
+        assert placement_rows
+        for row in placement_rows:  # batched search must never worsen H
+            h_ratio = float(row.split("h_max_ratio=")[1].split(";")[0])
+            assert h_ratio <= 1.0 + 1e-6, row
 
     def test_report_writer_outputs_both_files(self, tmp_path):
         from repro.experiments.report import write_outputs
@@ -252,6 +283,7 @@ class TestBenchmarkContract:
             json_path=str(tmp_path / "BENCH_sweep.json"),
             dryrun_dir=str(tmp_path / "nodir"),
             perf_dir=str(tmp_path / "nodir"),
+            sweeps_dir=str(tmp_path / "nodir"),
         )
         text = open(md).read()
         for section in ("## §Calibration", "## §Dry-run", "## §Roofline", "## §Perf",
@@ -262,3 +294,31 @@ class TestBenchmarkContract:
         payload = json_lib.load(open(js))
         assert payload["records"] and payload["comparisons"]
         assert payload["grid"]["name"] == "mini"
+        assert payload["placement_stats"]["batched_configs"] >= 1
+
+    def test_extra_sweep_artifacts_render_sections(self, tmp_path):
+        """§Ablation / §Mesh-scaling render from artifacts/sweeps/*.json."""
+        from repro.experiments.report import save_sweep_artifact, write_outputs
+
+        grid = grid_by_name("mini")
+        res = run_sweep(grid, cache_dir=str(tmp_path / "cache"), measure_serial=False,
+                        backend="numpy")
+        sweeps = tmp_path / "sweeps"
+        # Stand-ins for the ablation/meshscale grids: payload shape is what
+        # the renderers consume, the grid name keys the section.
+        for name in ("ablation", "meshscale"):
+            import dataclasses as dc
+
+            res2 = dc.replace(res, grid=dc.replace(res.grid, name=name))
+            save_sweep_artifact(res2, str(sweeps))
+        md, _ = write_outputs(
+            res,
+            md_path=str(tmp_path / "E.md"),
+            json_path=str(tmp_path / "B.json"),
+            dryrun_dir=str(tmp_path / "nodir"),
+            perf_dir=str(tmp_path / "nodir"),
+            sweeps_dir=str(sweeps),
+        )
+        text = open(md).read()
+        assert "## §Ablation" in text
+        assert "## §Mesh scaling" in text

@@ -1,0 +1,233 @@
+"""Batched placement-search engine: delta-kernel exactness, serial parity,
+H-no-worse vs the randomized serial search, and oracle optimality checks."""
+import numpy as np
+import pytest
+
+from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D
+from repro.core.partition import powerlaw_partition, random_partition
+from repro.core.placement import (
+    Placement,
+    brute_force_placement,
+    greedy_placement,
+    ilp_placement,
+    move_delta_matrix,
+    place,
+    quad_placement,
+    random_placement,
+    swap_delta_matrix,
+    symmetrize_weights,
+    two_opt,
+    two_opt_best_move,
+)
+from repro.core.traffic import traffic_from_partition
+from repro.experiments.placement_batch import (
+    BATCH_METHOD_SUFFIX,
+    batch_descend,
+    place_batch,
+)
+from repro.graph.generators import rmat
+
+
+def _instance(n=12, topo=None, seed=0, density=0.5):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n, n)) * (rng.random((n, n)) < density)
+    np.fill_diagonal(w, 0.0)
+    return w, topo or Mesh2D(4, 5)
+
+
+def _paper_configs(n_graphs=4, parts=16, seed=0):
+    """Searched paper-grid-shaped configs: real traffic, quad/greedy methods."""
+    traffics, partitions, topologies = [], [], []
+    for i in range(n_graphs):
+        g = rmat(400, 4000, seed=seed + i)
+        for part_fn in (powerlaw_partition, random_partition):
+            p = part_fn(g.src, g.dst, g.num_nodes, parts)
+            traffics.append(traffic_from_partition(p, g.src, g.dst))
+            partitions.append(p)
+            topologies.append(
+                Mesh2D(8, 8) if i % 2 == 0 else FlattenedButterfly(8, 8)
+            )
+    return traffics, partitions, topologies
+
+
+class TestDeltaKernels:
+    def test_swap_delta_matches_recomputed_h(self):
+        w, topo = _instance()
+        sym = symmetrize_weights(w)
+        d = topo.distance_matrix().astype(np.float64)
+        pl = random_placement(12, topo, seed=1)
+        h0 = pl.weighted_hops(w)
+        ds = swap_delta_matrix(sym, d, pl.site)
+        for i, j in ((0, 1), (3, 7), (5, 11), (10, 2)):
+            s2 = pl.site.copy()
+            s2[i], s2[j] = s2[j], s2[i]
+            h1 = Placement(topo, s2, "x").weighted_hops(w)
+            assert ds[i, j] == pytest.approx(h1 - h0, abs=1e-9)
+        np.testing.assert_allclose(np.diagonal(ds), 0.0)
+
+    def test_move_delta_matches_recomputed_h(self):
+        w, topo = _instance(seed=2)
+        sym = symmetrize_weights(w)
+        d = topo.distance_matrix().astype(np.float64)
+        pl = random_placement(12, topo, seed=3)
+        h0 = pl.weighted_hops(w)
+        dm = move_delta_matrix(sym, d, pl.site)
+        occupied = np.zeros(topo.num_nodes, bool)
+        occupied[pl.site] = True
+        for i in (0, 4, 9):
+            for t in np.nonzero(~occupied)[0][:4]:
+                s2 = pl.site.copy()
+                s2[i] = t
+                h1 = Placement(topo, s2, "x").weighted_hops(w)
+                assert dm[i, t] == pytest.approx(h1 - h0, abs=1e-9)
+
+
+class TestBestMoveDescent:
+    def test_reaches_full_local_optimum(self):
+        w, topo = _instance(seed=4)
+        out = two_opt_best_move(random_placement(12, topo, seed=5), w)
+        sym = symmetrize_weights(w)
+        d = topo.distance_matrix().astype(np.float64)
+        ds = swap_delta_matrix(sym, d, out.site)
+        np.fill_diagonal(ds, np.inf)
+        dm = move_delta_matrix(sym, d, out.site)
+        occupied = np.zeros(topo.num_nodes, bool)
+        occupied[out.site] = True
+        dm[:, occupied] = np.inf
+        assert ds.min() >= -1e-9 and dm.min() >= -1e-9
+
+    def test_never_worse_than_init(self):
+        for seed in range(5):
+            w, topo = _instance(seed=seed)
+            pl = random_placement(12, topo, seed=seed)
+            out = two_opt_best_move(pl, w)
+            assert out.weighted_hops(w) <= pl.weighted_hops(w) + 1e-9
+
+    def test_near_ilp_on_small_instance(self):
+        w, _ = _instance(6, topo=Mesh2D(3, 3), seed=3)
+        topo = Mesh2D(3, 3)
+        ilp = ilp_placement(w, topo, time_limit=30)
+        bm = two_opt_best_move(greedy_placement(w, topo), w)
+        assert bm.weighted_hops(w) <= 1.3 * ilp.weighted_hops(w) + 1e-9
+
+    def test_matches_brute_force_band_tiny(self):
+        w, _ = _instance(4, topo=Mesh2D(2, 2), seed=6, density=0.9)
+        topo = Mesh2D(2, 2)
+        brute = brute_force_placement(w, topo)
+        bm = two_opt_best_move(greedy_placement(w, topo), w)
+        assert bm.weighted_hops(w) <= 1.3 * brute.weighted_hops(w) + 1e-9
+
+
+class TestBatchDescend:
+    def test_numpy_bit_identical_to_serial_reference(self):
+        """Acceptance parity: the stacked numpy recursion applies exactly the
+        moves `two_opt_best_move` applies, config by config."""
+        traffics, _, topologies = _paper_configs(3)
+        ws = [t.bytes_matrix for t in traffics]
+        inits = [quad_placement(16, topo).site for topo in topologies]
+        out, stats = batch_descend(ws, topologies, inits, backend="numpy")
+        assert stats.backend == "numpy" and stats.batched_configs == len(ws)
+        for w, topo, init, sites in zip(ws, topologies, inits, out):
+            ref = two_opt_best_move(Placement(topo, init, "quad"), w)
+            np.testing.assert_array_equal(sites, ref.site)
+
+    def test_jax_backend_matches_numpy_h(self):
+        pytest.importorskip("jax")
+        traffics, _, topologies = _paper_configs(2)
+        ws = [t.bytes_matrix for t in traffics]
+        inits = [quad_placement(16, topo).site for topo in topologies]
+        out_np, _ = batch_descend(ws, topologies, inits, backend="numpy")
+        out_jx, stats = batch_descend(ws, topologies, inits, backend="jax")
+        assert stats.backend == "jax"
+        for w, topo, s_np, s_jx in zip(ws, topologies, out_np, out_jx):
+            h_np = Placement(topo, s_np, "x").weighted_hops(w)
+            h_jx = Placement(topo, np.asarray(s_jx), "x").weighted_hops(w)
+            # f32 tie-breaking may take a different descent path; the
+            # converged quality must match to f32 tolerance.
+            assert h_jx == pytest.approx(h_np, rel=1e-3)
+
+    def test_mixed_topologies_share_one_group(self):
+        """mesh2d and fbutterfly of equal size stack into one program and
+        still get their own distance metric."""
+        w, _ = _instance(8, topo=Mesh2D(4, 4), seed=7, density=0.8)
+        topos = [Mesh2D(4, 4), FlattenedButterfly(4, 4), Torus2D(4, 4)]
+        init = random_placement(8, topos[0], seed=8).site
+        out, stats = batch_descend([w] * 3, topos, [init] * 3, backend="numpy")
+        assert stats.groups == 1
+        for topo, sites in zip(topos, out):
+            ref = two_opt_best_move(Placement(topo, init, "r"), w)
+            np.testing.assert_array_equal(sites, ref.site)
+
+
+class TestPlaceBatch:
+    def test_h_no_worse_than_serial_place_at_matched_budgets(self):
+        """Acceptance: batched H ≤ serial greedy/quad+two_opt H per config."""
+        traffics, partitions, topologies = _paper_configs(4)
+        pls, stats = place_batch(
+            traffics, partitions, topologies, methods="auto", seeds=0, backend="numpy"
+        )
+        assert stats.batched_configs == len(traffics)
+        for t, p, topo, pl in zip(traffics, partitions, topologies, pls):
+            serial = place(t, p, topo, method="auto", seed=0)
+            assert pl.weighted_hops(t.bytes_matrix) <= serial.weighted_hops(
+                t.bytes_matrix
+            ) + 1e-9
+            assert pl.method.endswith(BATCH_METHOD_SUFFIX)
+
+    def test_restarts_never_hurt(self):
+        traffics, partitions, topologies = _paper_configs(2)
+        base, _ = place_batch(
+            traffics, partitions, topologies, methods="auto", seeds=0, backend="numpy"
+        )
+        kicked, stats = place_batch(
+            traffics,
+            partitions,
+            topologies,
+            methods="auto",
+            seeds=0,
+            restarts=2,
+            backend="numpy",
+        )
+        assert stats.restarts == 2
+        for t, b, k in zip(traffics, base, kicked):
+            assert k.weighted_hops(t.bytes_matrix) <= b.weighted_hops(t.bytes_matrix) + 1e-9
+
+    def test_constructive_methods_fall_through_to_serial(self):
+        traffics, partitions, topologies = _paper_configs(1)
+        pls, stats = place_batch(
+            traffics[:2],
+            partitions[:2],
+            topologies[:2],
+            methods=["random", "columnar"],
+            seeds=5,
+        )
+        assert stats.serial_configs == 2 and stats.batched_configs == 0
+        serial = place(traffics[0], partitions[0], topologies[0], method="random", seed=5)
+        np.testing.assert_array_equal(pls[0].site, serial.site)
+
+    def test_results_are_valid_injective_placements(self):
+        traffics, partitions, topologies = _paper_configs(2)
+        pls, _ = place_batch(
+            traffics, partitions, topologies, methods="auto", seeds=0, backend="numpy"
+        )
+        for pl in pls:
+            assert np.unique(pl.site).size == pl.site.size  # Placement re-checks too
+
+    def test_deterministic_across_calls(self):
+        traffics, partitions, topologies = _paper_configs(1)
+        a, _ = place_batch(traffics, partitions, topologies, methods="auto", seeds=3)
+        b, _ = place_batch(traffics, partitions, topologies, methods="auto", seeds=3)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x.site, y.site)
+
+    def test_small_instance_tracks_ilp_oracle(self):
+        """On an exactly-solvable instance the batched search lands within
+        the same 1.3× band the serial search is held to."""
+        g = rmat(80, 600, seed=9)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 2)
+        t = traffic_from_partition(p, g.src, g.dst)
+        topo = Mesh2D(3, 3)
+        ilp = ilp_placement(t.bytes_matrix, topo, time_limit=30)
+        pls, _ = place_batch([t], [p], [topo], methods="greedy", seeds=0, backend="numpy")
+        h_b = pls[0].weighted_hops(t.bytes_matrix)
+        assert h_b <= 1.3 * ilp.weighted_hops(t.bytes_matrix) + 1e-9

@@ -96,6 +96,48 @@ class TestSimulator:
         )
 
 
+class TestTorusRouting:
+    """ROADMAP item: Torus2D link loads previously used non-wraparound mesh
+    stepping, inconsistent with the wraparound hop metric."""
+
+    def test_wraparound_flow_serializes_on_one_link(self):
+        from repro.core.noc import Torus2D
+        from repro.core.placement import Placement
+        from repro.core.simulator import _per_link_peak_load
+        from repro.core.traffic import TrafficMatrix
+
+        topo = Torus2D(4, 4)
+        m = np.zeros((4, 4))
+        m[0, 1] = 64.0  # one flow between shards at (0,0) and (3,0)
+        t = TrafficMatrix(
+            num_parts=1, bytes_matrix=m,
+            phase_bytes={"process": 64.0, "reduce": 0.0, "apply": 0.0},
+        )
+        # routers 0=(0,0) and 12=(3,0): mesh stepping would cross 3 links,
+        # the torus wraps in 1 — byte_hops must use the 1-hop metric and the
+        # whole flow must land on the single wrap link.
+        pl = Placement(topo, np.array([0, 12, 1, 2]), "manual")
+        byte_hops, peak = _per_link_peak_load(t, pl, SimParams())
+        assert byte_hops == pytest.approx(64.0)  # 1 hop × 64 B
+        assert peak == pytest.approx(64.0)
+
+    def test_serial_and_batched_agree_on_torus(self):
+        from repro.core.noc import Torus2D
+        from repro.core.placement import random_placement
+        from repro.experiments.batched import simulate_batch
+
+        g = rmat(150, 1200, seed=13)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)
+        t = traffic_from_partition(p, g.src, g.dst)
+        topo = Torus2D(4, 4)
+        pl = random_placement(t.num_logical, topo, seed=2)
+        (b,) = simulate_batch([t], [pl], backend="numpy")
+        s = simulate(t, pl)
+        assert b.exec_time_s == pytest.approx(s.exec_time_s, rel=1e-12)
+        assert b.t_serialization_s == pytest.approx(s.t_serialization_s, rel=1e-12)
+        assert b.byte_hops == pytest.approx(s.byte_hops, rel=1e-12)
+
+
 class TestReplication:
     def test_hub_replication_saves_bytes_on_powerlaw(self):
         g = rmat(1000, 20_000, seed=4)

@@ -3,21 +3,25 @@ quad + random-probe two_opt, Algorithms 3–4) vs the batched swap-delta engine
 (`repro.experiments.placement_batch`) on paper-grid-shaped inputs.
 
 Rows (name,us_per_call,derived):
-  placement/serial_loop     the replaced one-config-at-a-time search
-  placement/batched_numpy   stacked steepest descent, float64 BLAS backend
-  placement/batched_jax     same program under jax.jit + lax.while_loop
-Derived fields carry the speedup vs the serial loop and the max H ratio
-(batched/serial weighted hops — must stay ≤ 1.0 + fp noise).
+  placement/serial_loop              the replaced one-config-at-a-time search
+  placement/batched_numpy            stacked steepest descent, float64 BLAS
+  placement/batched_jax              same program under jax.jit + while_loop
+  placement/greedy_construct_serial  per-config greedy_placement loop
+  placement/greedy_construct_batched_{numpy,jax}
+                                     stacked argmax-insertion construction
+Derived fields carry the speedup vs the matching serial loop, the max H
+ratio (batched/serial weighted hops — must stay ≤ 1.0 + fp noise for the
+search rows) and, for the numpy construction row, the bit-parity flag.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import CACHE_DIR, PARTS, SCALE, emit, timed, workloads
-from repro.core.placement import auto_mesh_for_parts, place
+from repro.core.placement import auto_mesh_for_parts, greedy_placement, place
 from repro.experiments.cache import SweepCache
 from repro.experiments.grid import GRIDS
-from repro.experiments.placement_batch import place_batch
+from repro.experiments.placement_batch import greedy_construct_batch, place_batch
 from repro.experiments.sweep import DEFAULT_TRACE_ITERS, TRACE_ITERS
 
 
@@ -90,6 +94,32 @@ def run() -> None:
             f"speedup={us_serial / max(us, 1e-9):.2f}x;h_max_ratio={ratio:.4f}"
             f";steps={stats.steps}",
         )
+
+    # ---- greedy construction in isolation (the tentpole stacked path) ------
+    ws = [t.bytes_matrix for t in traffics]
+
+    def construct_serial():
+        return [
+            greedy_placement(w, topo, seed=s).site
+            for w, topo, s in zip(ws, topologies, seeds)
+        ]
+
+    serial_sites, us_cons = timed(construct_serial, repeats=3)
+    emit("placement/greedy_construct_serial", us_cons, f"configs={n_cfg}")
+    for backend in ("numpy", "jax"):
+        if backend == "jax":
+            try:
+                import jax  # noqa: F401
+            except ImportError:
+                continue
+        (sites, _), us = timed(
+            greedy_construct_batch, ws, topologies, seeds=seeds, backend=backend, repeats=3
+        )
+        derived = f"speedup={us_cons / max(us, 1e-9):.2f}x"
+        if backend == "numpy":  # the batched numpy constructor is bit-exact
+            parity = all(np.array_equal(a, b) for a, b in zip(serial_sites, sites))
+            derived += f";bit_parity={parity}"
+        emit(f"placement/greedy_construct_batched_{backend}", us, derived)
 
 
 if __name__ == "__main__":

@@ -2,11 +2,37 @@
 
 The optimisation: assign each logical shard (structure, part) to a router so
 that the hop-weighted traffic  H = Σ_ij f_ij · dist(site_i, site_j)  is
-minimal.  This is a quadratic assignment problem; the paper calls it an ILP —
-we provide the standard linearised MILP (exact, small instances, via
-scipy/HiGHS), the paper's regular constructive layout (Algorithm 3 / Fig. 4),
-a traffic-weighted greedy + 2-opt for large meshes, a brute-force oracle for
-tests, and the randomized baseline the paper compares against (Fig. 5).
+minimal — the objective the paper derives from the power-law degree skew of
+Eq. 1 (a few hub shards carry most f_ij, so collapsing *their* routes is
+where the Fig. 7 2–5× speedup comes from).  This is a quadratic assignment
+problem; the paper calls it an ILP — we provide the standard linearised MILP
+(exact, small instances, via scipy/HiGHS), the paper's regular constructive
+layout (Algorithm 3 / Fig. 4), a traffic-weighted greedy + 2-opt for large
+meshes, a brute-force oracle for tests, and the randomized baseline the paper
+compares against (Fig. 5).
+
+Delta-kernel math (the shared heart of every search path here and of the
+batched engine in `repro.experiments.placement_batch`):
+
+* `symmetrize_weights` folds the directed f_ij into w = f + fᵀ (zero
+  diagonal) so H = ½ Σ_ij w_ij·d(site_i, site_j) ranges over ordered pairs
+  and every ΔH below is exact for the undirected objective.
+* `swap_delta_matrix` — with A[i, j] = Σ_k w[i, k]·d(site_j, site_k) (one
+  (n,n)·(n,n) matmul), the H-change of swapping shards i and j is
+  Δswap(i, j) = A[i,j] + A[j,i] + 2·w_ij·d(site_i, site_j) − A[i,i] − A[j,j];
+  the 2·w_ij·d_ij term restores the pair's own cross term, which the stale
+  site array drops from both sides (d[s, s] = 0).
+* `move_delta_matrix` — Δmove(i, t) = (w @ d[:, site]ᵀ)[i, t] − A[i, i]:
+  the H-change of relocating shard i to router t, one (n,n)·(n,S) matmul.
+
+`two_opt` probes one random candidate per iteration against the scalar forms
+of these deltas (the paper-era reference search); `two_opt_best_move`
+evaluates all O(n²) swaps + O(n·S) moves per step and applies the single
+best (steepest descent to a full 2-opt local optimum); the batched engine
+runs that identical recursion stacked over every sweep config at once.
+`greedy_placement` builds the *initial* layout the searches refine — its
+seeding rule lives in `greedy_seed` so the serial and batched constructors
+cannot drift.
 """
 from __future__ import annotations
 
@@ -25,6 +51,7 @@ __all__ = [
     "random_placement",
     "columnar_placement",
     "quad_placement",
+    "greedy_seed",
     "greedy_placement",
     "symmetrize_weights",
     "swap_delta_matrix",
@@ -150,10 +177,24 @@ def quad_placement(num_parts: int, topology: Topology) -> Placement:
     return Placement(topology, site, "quad")
 
 
+def greedy_seed(doubled_weights: np.ndarray, d: np.ndarray) -> tuple[int, int]:
+    """Greedy construction's seeding rule: (heaviest shard, mesh centroid).
+    Takes the doubled w + wᵀ weights and the (S, S) distance matrix.  Shared
+    by `greedy_placement` and the batched constructor
+    (`repro.experiments.placement_batch.greedy_construct_batch`) so the two
+    paths cannot drift."""
+    return int(doubled_weights.sum(1).argmax()), int(d.sum(1).argmin())
+
+
 def greedy_placement(weights: np.ndarray, topology: Topology, *, seed: int = 0) -> Placement:
     """Traffic-weighted greedy: place shards in order of connectivity to the
-    already-placed set, each at the router minimising added weighted hops.
-    Scales to thousands of shards (vectorised over candidate routers).
+    already-placed set, each at the router minimising added weighted hops
+    (argmax-connectivity insertion, argmin-cost site — the constructive half
+    of Algorithm 4).  Scales to thousands of shards (vectorised over
+    candidate routers).  This is the serial reference for
+    `repro.experiments.placement_batch.greedy_construct_batch`, which runs
+    the identical recursion stacked over sweep configs (bit-parity asserted
+    in tests/test_placement_batch.py).
     """
     w = np.asarray(weights, dtype=np.float64)
     w = w + w.T
@@ -165,9 +206,7 @@ def greedy_placement(weights: np.ndarray, topology: Topology, *, seed: int = 0) 
     # accumulated cost-to-placed for every (node, site): updated incrementally.
     cost = np.zeros((n, num_sites), dtype=np.float64)
     placed_mask = np.zeros(n, dtype=bool)
-    # Seed: the heaviest shard at the mesh centroid.
-    first = int(w.sum(1).argmax())
-    center = int(d.sum(1).argmin())
+    first, center = greedy_seed(w, d)
     order_rng = np.random.default_rng(seed)
     cur, cur_site = first, center
     for _ in range(n):

@@ -114,16 +114,19 @@ GRIDS: dict[str, GridSpec] = {
         parts=(16,),
         **_PROPOSED_VS_BASELINE,
     ),
-    # CI-sized 2-config sweep (scripts/verify.sh): one workload, one
-    # algorithm, proposed vs baseline on a tiny graph.  Placement is pinned
-    # to quad+2opt — "auto" would route this 16-shard instance to the exact
-    # MILP, which is minutes of HiGHS for no extra fidelity in CI.
+    # CI-sized 3-config sweep (scripts/verify.sh): one workload, one
+    # algorithm, proposed (under both searched placements) vs baseline on a
+    # tiny graph.  Placement is pinned to quad/greedy+2opt — "auto" would
+    # route this 16-shard instance to the exact MILP, which is minutes of
+    # HiGHS for no extra fidelity in CI.  The powerlaw+greedy scheme exists
+    # so CI exercises the batched greedy *construction* path, not just the
+    # quad one (asserted in scripts/verify.sh).
     "mini": GridSpec(
         name="mini",
         workloads=("amazon",),
         algorithms=("bfs",),
-        partitioners=("powerlaw", "random"),
-        placements=("quad", "random"),
+        partitioners=("powerlaw", "powerlaw", "random"),
+        placements=("quad", "greedy", "random"),
         topologies=("mesh2d",),
         parts=(4,),
         scale=0.001,
@@ -150,6 +153,22 @@ GRIDS: dict[str, GridSpec] = {
         topologies=("mesh2d", "fbutterfly"),
         parts=(9, 16, 25),
         **_PROPOSED_VS_BASELINE,
+    ),
+    # Wrap-link gains: mesh2d vs torus2d (exact wraparound X-Y routing) on
+    # the same cells, at two mesh sizes.  Placement is pinned to greedy so
+    # (a) both topologies run the *same* search — quad would serve mesh2d but
+    # not the torus, making the comparison about methods instead of links —
+    # and (b) every searched config goes through the batched greedy
+    # construction (the stacked path this grid exists to exercise at C ≫ 1).
+    "torus": GridSpec(
+        name="torus",
+        workloads=("amazon", "soc-pokec"),
+        algorithms=_ALGS,
+        partitioners=("powerlaw", "random"),
+        placements=("greedy", "random"),
+        topologies=("mesh2d", "torus2d"),
+        parts=(16, 25),
+        pair_schemes=True,
     ),
 }
 

@@ -1,12 +1,12 @@
 """Batched placement-search engine: the sweep's per-config `greedy/quad +
-two_opt` Python loops (paper §5.2–5.3, Algorithms 3–4) replaced by one
-stacked tensor program.
+two_opt` Python loops (paper §5.2–5.3, Algorithms 3–4) replaced by stacked
+tensor programs — both the greedy *construction* and the 2-opt *refinement*.
 
-The serial search probes ONE random swap per iteration; `two_opt_best_move`
-(core.placement) evaluates the H-delta of *all* O(n²) swaps and O(n·S) free-
-site moves per step with two matmuls and applies the single best.  This
-module runs that identical recursion stacked over every sweep configuration
-at once:
+Refinement.  The serial search probes ONE random swap per iteration;
+`two_opt_best_move` (core.placement) evaluates the H-delta of *all* O(n²)
+swaps and O(n·S) free-site moves per step with two matmuls and applies the
+single best.  This module runs that identical recursion stacked over every
+sweep configuration at once:
 
   Dss[c]   = D[c][site[c, :, None], site[c, None, :]]          (C, n, n)
   A[c]     = W[c] @ Dss[c]                                     (C, n, n)
@@ -15,14 +15,38 @@ at once:
 
 then per config applies the best improving candidate and repeats until every
 config has converged to a full 2-opt local optimum (or the step budget runs
-out).  Mirroring `simulate_batch`, configs are grouped by problem shape
-(n logical shards, S routers) — each group is one stacked program; topologies
-may differ inside a group (the per-config distance matrices are stacked).
+out).  (See `core.placement`'s module docstring for the delta-kernel
+derivation — H is the hop-weighted traffic of the paper's Eq. 1 skew, the
+quantity Fig. 7's 2–5× speedups are driven by.)
+
+Construction (`greedy_construct_batch`).  The greedy initial layout the
+search refines used to be a per-config Python loop over
+`core.placement.greedy_placement` — irrelevant when `auto` resolves to the
+quad layout (the paper grid), dominant when a grid pins `placement=greedy`
+at large C (the torus grid).  The batched constructor runs the same
+argmax-insertion recursion stacked over configs: per step, for all configs
+at once,
+
+  conn[c, i]  = Σ_{j placed} w2[c, i, j]      (argmax → next shard)
+  cost[c, i, s] += w2[c, i, cur]·D[c, site_cur, s]   (argmin over free
+                                                      sites → its router)
+
+The numpy backend replays `greedy_placement` bit-exactly per config — same
+summation trees, same tie-breaking, same seeded-RNG fallback for shards
+with no connectivity to the placed set (asserted in
+tests/test_placement_batch.py).  The jax backend replaces that rare RNG
+fallback with the first unplaced shard (deterministic under jit) — same
+neighbourhood, documented divergence, H-parity still measured per sweep.
+
+Mirroring `simulate_batch`, configs are grouped by problem shape (n logical
+shards, S routers) — each group is one stacked program; topologies may
+differ inside a group (the per-config distance matrices are stacked).
 
 Backends (via `resolve_backend`, like `simulate_batch`): "numpy" — float64
 einsums, bit-identical to `two_opt_best_move` per config; "jax" —
-`jax.jit`-compiled `jax.lax.while_loop`, weights pre-normalised per config so
-float32 on CPU keeps the accept decisions stable (~1e-6 relative H).
+`jax.jit`-compiled `jax.lax.while_loop`/`fori_loop`, weights pre-normalised
+per config so float32 on CPU keeps the accept decisions stable (~1e-6
+relative H).
 
 Search quality: steepest descent converges to a local optimum of the same
 swap+move neighbourhood the serial randomized search explores, and on paper-
@@ -44,7 +68,7 @@ from repro.core.placement import (
     BEST_MOVE_TOL,
     Placement,
     default_max_steps,
-    greedy_placement,
+    greedy_seed,
     quad_placement,
     place,
     resolve_method,
@@ -55,6 +79,7 @@ from repro.experiments.batched import resolve_backend
 
 __all__ = [
     "batch_descend",
+    "greedy_construct_batch",
     "place_batch",
     "PlacementBatchStats",
     "BATCH_SEARCH_METHODS",
@@ -75,6 +100,8 @@ class PlacementBatchStats:
 
     batched_configs: int = 0
     serial_configs: int = 0
+    greedy_constructed: int = 0  # configs whose init came from the batched
+    #                              greedy constructor (vs quad / serial paths)
     groups: int = 0
     steps: int = 0  # total best-move steps across groups (max over configs)
     backend: str = "numpy"  # ","-joined when (n,S) groups resolve differently
@@ -82,6 +109,150 @@ class PlacementBatchStats:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# batched greedy construction (Algorithm 4's constructive half, stacked)
+# ---------------------------------------------------------------------------
+
+
+def _greedy_construct_numpy(
+    w2: np.ndarray, d: np.ndarray, seeds: list[int]
+) -> np.ndarray:
+    """Stacked argmax-insertion, bit-identical to `greedy_placement` per
+    config: `w2` (C, n, n) doubled weights (w + wᵀ, diagonal kept — the
+    serial constructor keeps it too), `d` (C, S, S) distances.  Per step the
+    connectivity argmax, the cost update and the free-site argmin run for
+    all C configs at once; summation trees match the serial loop's (placed
+    columns gathered in ascending index order, cost accumulated in placement
+    order), so ties break identically.  The no-connectivity fallback draws
+    from per-config `default_rng(seed)` streams exactly as the serial loop
+    does."""
+    c, n, _ = w2.shape
+    s_count = d.shape[1]
+    cidx = np.arange(c)
+    placed_site = np.full((c, n), -1, dtype=np.int64)
+    placed_mask = np.zeros((c, n), dtype=bool)
+    free = np.ones((c, s_count), dtype=bool)
+    cost = np.zeros((c, n, s_count), dtype=np.float64)
+    rngs = [np.random.default_rng(s) for s in seeds]
+    seeded = [greedy_seed(w2[k], d[k]) for k in range(c)]  # the serial rule itself
+    cur = np.array([f for f, _ in seeded], dtype=np.int64)
+    cur_site = np.array([s for _, s in seeded], dtype=np.int64)
+    for step in range(n):
+        placed_site[cidx, cur] = cur_site
+        placed_mask[cidx, cur] = True
+        free[cidx, cur_site] = False
+        cost += w2[cidx, :, cur][:, :, None] * d[cidx, cur_site][:, None, :]
+        if step == n - 1:
+            break
+        # Placed columns in ascending index order (stable argsort of the
+        # mask) — the same gather + last-axis reduction `w[:, placed_mask]
+        # .sum(1)` performs serially, so fp ties cannot diverge.
+        placed_cols = np.argsort(~placed_mask, axis=1, kind="stable")[:, : step + 1]
+        gathered = np.take_along_axis(
+            w2, np.broadcast_to(placed_cols[:, None, :], (c, n, step + 1)), axis=2
+        )
+        conn = gathered.sum(axis=2)
+        conn[placed_mask] = -np.inf
+        nxt = conn.argmax(axis=1)
+        val = conn[cidx, nxt]
+        for k in np.nonzero(~np.isfinite(val) | (val <= 0))[0]:
+            unplaced = np.nonzero(~placed_mask[k])[0]
+            nxt[k] = int(rngs[k].choice(unplaced))
+        cand = cost[cidx, nxt]
+        cand[~free] = np.inf
+        cur, cur_site = nxt, cand.argmin(axis=1)
+    return placed_site
+
+
+_JAX_GREEDY = None
+
+
+def _jax_greedy_fn():
+    """Build (once) the jitted stacked greedy construction; jit
+    re-specialises per (C, n, S) group shape automatically."""
+    global _JAX_GREEDY
+    if _JAX_GREEDY is not None:
+        return _JAX_GREEDY
+    import jax
+    import jax.numpy as jnp
+
+    def construct_one(w2, d):
+        n = w2.shape[0]
+        s_count = d.shape[0]
+
+        def body(_step, state):
+            site, placed, free, cost, conn, cur, cur_site = state
+            site = site.at[cur].set(cur_site)
+            placed = placed.at[cur].set(True)
+            free = free.at[cur_site].set(False)
+            cost = cost + w2[:, cur][:, None] * d[cur_site][None, :]
+            conn = conn + w2[:, cur]
+            masked = jnp.where(placed, -jnp.inf, conn)
+            nxt = jnp.argmax(masked)
+            # The serial loop draws a seeded-random unplaced shard when no
+            # candidate connects to the placed set; under jit we take the
+            # first unplaced shard instead (deterministic) — a documented
+            # divergence on a path real traffic matrices rarely hit.
+            nxt = jnp.where(masked[nxt] <= 0.0, jnp.argmin(placed), nxt)
+            cand = jnp.where(free, cost[nxt], jnp.inf)
+            return site, placed, free, cost, conn, nxt, jnp.argmin(cand)
+
+        first = jnp.argmax(w2.sum(1))
+        center = jnp.argmin(d.sum(1))
+        state = (
+            jnp.full((n,), -1, dtype=jnp.int32),
+            jnp.zeros((n,), dtype=bool),
+            jnp.ones((s_count,), dtype=bool),
+            jnp.zeros((n, s_count), dtype=w2.dtype),
+            jnp.zeros((n,), dtype=w2.dtype),
+            first,
+            center,
+        )
+        return jax.lax.fori_loop(0, n, body, state)[0]
+
+    _JAX_GREEDY = jax.jit(jax.vmap(construct_one))
+    return _JAX_GREEDY
+
+
+def _greedy_construct_jax(w2: np.ndarray, d: np.ndarray, _seeds: list[int]) -> np.ndarray:
+    import jax.numpy as jnp
+
+    c = w2.shape[0]
+    # Same per-config normalisation as the jax descent: keeps f32 comparisons
+    # stable across the byte-scale range of real traffic (argmax/argmin are
+    # scale-invariant, so this cannot change the greedy decisions themselves).
+    scale = np.maximum(w2.reshape(c, -1).max(axis=1), 1.0)[:, None, None]
+    sites = _jax_greedy_fn()(jnp.asarray(w2 / scale), jnp.asarray(d, dtype=np.float32))
+    return np.asarray(sites, dtype=np.int64)
+
+
+def greedy_construct_batch(
+    weights: list[np.ndarray] | np.ndarray,
+    topologies: list[Topology],
+    *,
+    seeds: list[int] | int = 0,
+    backend: str = "auto",
+) -> tuple[list[np.ndarray], str]:
+    """Batched `greedy_placement` construction for C configs of identical
+    (n, S) shape: `weights` raw (n, n) per config (doubled internally, like
+    the serial constructor), `topologies` one per config (mixed topologies of
+    equal size stack), `seeds` feed the per-config no-connectivity fallback
+    streams.  Returns (site arrays in input order, backend used).  The numpy
+    backend is bit-identical to `greedy_placement` per config; jax matches in
+    H after refinement (see module docstring)."""
+    w2 = np.stack(
+        [np.asarray(w, dtype=np.float64) + np.asarray(w, dtype=np.float64).T for w in weights]
+    )
+    d = np.stack([t.distance_matrix().astype(np.float64) for t in topologies])
+    seeds_l = [seeds] * w2.shape[0] if isinstance(seeds, int) else list(seeds)
+    if len(seeds_l) != w2.shape[0]:
+        raise ValueError("seeds must match the config count")
+    backend = resolve_backend(backend, int(w2.size + d.size))
+    construct = _greedy_construct_jax if backend == "jax" else _greedy_construct_numpy
+    sites = construct(w2, d, seeds_l)
+    return list(sites), backend
 
 
 # ---------------------------------------------------------------------------
@@ -267,18 +438,6 @@ def batch_descend(
     return list(out), stats
 
 
-def _initial_sites(
-    method: str,
-    traffic: TrafficMatrix,
-    weights: np.ndarray,
-    topology: Topology,
-    seed: int,
-) -> np.ndarray:
-    if method == "quad":
-        return quad_placement(traffic.num_parts, topology).site
-    return greedy_placement(weights, topology, seed=seed).site
-
-
 def _perturbed(init: np.ndarray, topology: Topology, *, seed) -> np.ndarray:
     """Restart init: the primary init kicked by n/4 random transpositions
     (plus relocations into free routers when the mesh has spares).  Stays in
@@ -356,10 +515,29 @@ def place_batch(
 
     backends_used: set[str] = set()
     for (n, _s), idxs in groups.items():
+        # Initial layouts: quad configs use the O(n) constructive tiling per
+        # config; greedy configs run ONE stacked argmax-insertion program for
+        # the whole group (the former per-config greedy_placement loop).
+        inits: dict[int, np.ndarray] = {
+            i: quad_placement(traffics[i].num_parts, topologies[i]).site
+            for i in idxs
+            if resolved[i] == "quad"
+        }
+        greedy_idxs = [i for i in idxs if resolved[i] == "greedy"]
+        if greedy_idxs:
+            greedy_sites, cons_backend = greedy_construct_batch(
+                [weights_all[i] for i in greedy_idxs],
+                [topologies[i] for i in greedy_idxs],
+                seeds=[seeds_l[i] for i in greedy_idxs],
+                backend=backend,
+            )
+            inits.update(zip(greedy_idxs, greedy_sites))
+            stats.greedy_constructed += len(greedy_idxs)
+            backends_used.add(cons_backend)
         w_list, topo_list, init_list, owner = [], [], [], []
         for i in idxs:
             w_i = weights_all[i]
-            init = _initial_sites(resolved[i], traffics[i], w_i, topologies[i], seeds_l[i])
+            init = inits[i]
             w_list.append(w_i)
             topo_list.append(topologies[i])
             init_list.append(init)

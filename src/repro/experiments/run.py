@@ -5,11 +5,13 @@
         --md /tmp/EXPERIMENTS.mini.md --json /tmp/BENCH_sweep.mini.json
 
 Writes `EXPERIMENTS.md` (human evidence record: §Calibration, §Dry-run,
-§Roofline, §Perf, Fig. 5/7/8, §Ablation, §Mesh-scaling tables) and
+§Roofline, §Perf, Fig. 5/7/8, §Ablation, §Mesh-scaling, §Torus tables) and
 `BENCH_sweep.json` (machine-readable per-config records + comparisons) for
-`--grid paper`; secondary grids store `artifacts/sweeps/<grid>.json`, which
-the next paper render folds in.  Completes offline; traces are cached under
-`--cache-dir` so repeated sweeps skip re-tracing.
+`--grid paper`; secondary grids (`ablation`, `meshscale`, `torus`) store
+`artifacts/sweeps/<grid>.json`, which the next paper render folds in.
+Completes offline; traces are cached under `--cache-dir` so repeated sweeps
+skip re-tracing.  `python -m repro.experiments.report --check` audits the
+committed report against the committed payloads without running anything.
 """
 from __future__ import annotations
 
@@ -57,6 +59,13 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--no-cache", action="store_true", help="recompute everything")
     ap.add_argument(
+        "--restarts",
+        type=int,
+        default=0,
+        help="extra perturbed-init descents per searched placement config"
+        " (stacked into the batched engine; 0 = single steepest descent)",
+    )
+    ap.add_argument(
         "--no-serial-check",
         action="store_true",
         help="skip the serial place/simulate reference loops: faster, but no"
@@ -74,6 +83,7 @@ def main(argv: list[str] | None = None) -> int:
         cache_dir=None if args.no_cache else args.cache_dir,
         backend=args.backend,
         measure_serial=not args.no_serial_check,
+        placement_restarts=args.restarts,
         progress=None if args.quiet else print,
     )
     artifact = None

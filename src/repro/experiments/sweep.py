@@ -115,6 +115,7 @@ def run_sweep(
     backend: str = "auto",
     params: SimParams = SimParams(),
     measure_serial: bool = True,
+    placement_restarts: int = 0,
     graphs: dict[str, object] | None = None,
     progress: Callable[[str], None] | None = None,
 ) -> SweepResult:
@@ -126,6 +127,9 @@ def run_sweep(
     comparisons — and, since the serial placements are then in hand, keeps
     the better-H placement per config (False skips that guard: results come
     from the batched engine alone).
+    `placement_restarts` stacks that many extra perturbed-init descents per
+    searched config into the batched engine (basin diversity; see
+    `place_batch`).
     `graphs` supplies pre-built workload graphs (name → HostGraph) so callers
     that already generated them (benchmarks/common.py) don't pay generation
     twice; the caller is responsible for them matching `grid.scale`/`seed`.
@@ -188,10 +192,16 @@ def run_sweep(
         topologies,
         methods=[c.placement for c in configs],
         seeds=[c.seed for c in configs],
+        restarts=placement_restarts,
         backend=backend,
     )
     t_placement = time.perf_counter() - t0
     placement_stats = pstats.as_dict()
+    say(
+        f"[sweep:{grid.name}] placement: {pstats.batched_configs} searched "
+        f"({pstats.greedy_constructed} greedy-constructed, stacked), "
+        f"{pstats.serial_configs} constructive/serial, {pstats.groups} shape group(s)"
+    )
     t_placement_serial = None
     if measure_serial and configs:
         t0 = time.perf_counter()

@@ -28,7 +28,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.sharding import MeshRules, axis_if_divisible, constrain
+from repro.models.sharding import (
+    MeshRules,
+    active_mesh,
+    axis_if_divisible,
+    compat_shard_map,
+    constrain,
+)
 
 __all__ = [
     "MoEConfig",
@@ -231,8 +237,7 @@ def _moe_ep(m: MoEConfig, lp: dict, x: Array, r: MeshRules) -> Array:
     """shard_map expert parallelism.  x: (N, D) sharded on the DP axes."""
     from jax.sharding import PartitionSpec as P
 
-    shard_map = jax.shard_map
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = active_mesh()
     if mesh is None or m.ep_axis not in (mesh.shape or {}):
         return _moe_local(m, lp, x, r)
     ep = mesh.shape[m.ep_axis]
@@ -255,7 +260,7 @@ def _moe_ep(m: MoEConfig, lp: dict, x: Array, r: MeshRules) -> Array:
     if n_tok_pad != n_tok:
         x = jnp.pad(x, ((0, n_tok_pad - n_tok), (0, 0)))
     body = functools.partial(_moe_ep_local_body, m, ep, e_pad)
-    out = shard_map(
+    out = compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import Initializer
+from repro.models import sharding as sharding_lib
 from repro.models.sharding import MeshRules, axis_if_divisible, constrain
 
 __all__ = ["DcnConfig", "init_params", "param_specs", "forward", "loss_fn",
@@ -151,7 +152,7 @@ def _lookup_psum_model(cfg: DcnConfig, tables: Array, ids: Array,
     (Hot rows ≡ hubs: because Algorithm 2's cyclic deal spreads hot rows
     across shards, per-shard gather work stays balanced — load_balance
     measured in tests.)"""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = sharding_lib.active_mesh()
     if mesh is None or "model" not in (mesh.shape or {}):
         from repro.kernels.embedding_bag.ops import embedding_bag
 
@@ -177,7 +178,7 @@ def _lookup_psum_model(cfg: DcnConfig, tables: Array, ids: Array,
         ww = ok.astype(tab_l.dtype) * w_l.astype(tab_l.dtype)
         return jax.lax.psum((rows * ww[..., None]).sum(2), "model")
 
-    return jax.shard_map(
+    return sharding_lib.compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(P(None, "model", None), ids_spec, ids_spec),

@@ -9,19 +9,35 @@ Rows (name,us_per_call,derived):
   placement/greedy_construct_serial  per-config greedy_placement loop
   placement/greedy_construct_batched_{numpy,jax}
                                      stacked argmax-insertion construction
+  placement/torus_construct_serial   per-config torus_quad_placement loop
+  placement/torus_construct_batched_{numpy,jax}
+                                     stacked wrap-aware layout assembly
+  placement/torus_greedy2opt_search  the greedy+2-opt search the torus
+                                     construction replaces (same configs)
 Derived fields carry the speedup vs the matching serial loop, the max H
 ratio (batched/serial weighted hops — must stay ≤ 1.0 + fp noise for the
-search rows) and, for the numpy construction row, the bit-parity flag.
+search rows; constructive/searched for the torus rows, where ≤ 1.0 means
+the construction beats the search it skips) and, for the numpy
+construction rows, the bit-parity flag.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import CACHE_DIR, PARTS, SCALE, emit, timed, workloads
-from repro.core.placement import auto_mesh_for_parts, greedy_placement, place
+from repro.core.placement import (
+    auto_mesh_for_parts,
+    greedy_placement,
+    place,
+    torus_quad_placement,
+)
 from repro.experiments.cache import SweepCache
 from repro.experiments.grid import GRIDS
-from repro.experiments.placement_batch import greedy_construct_batch, place_batch
+from repro.experiments.placement_batch import (
+    greedy_construct_batch,
+    place_batch,
+    torus_construct_batch,
+)
 from repro.experiments.sweep import DEFAULT_TRACE_ITERS, TRACE_ITERS
 
 
@@ -120,6 +136,66 @@ def run() -> None:
             parity = all(np.array_equal(a, b) for a, b in zip(serial_sites, sites))
             derived += f";bit_parity={parity}"
         emit(f"placement/greedy_construct_batched_{backend}", us, derived)
+
+    # ---- torus-native constructive layouts (this PR's stacked path) --------
+    torus_topo = auto_mesh_for_parts(PARTS, "torus2d")
+    if (torus_topo.kx // 2) * (torus_topo.ky // 2) >= PARTS:  # quads fit
+        _torus_rows(ws, traffics, partitions, seeds, torus_topo)
+
+
+def _torus_rows(ws, traffics, partitions, seeds, torus_topo) -> None:
+    """The placement/torus_* rows — skipped entirely (no rows) when 2×2
+    quads don't fit the BENCH_PARTS auto torus."""
+    n_cfg = len(ws)
+    torus_topos = [torus_topo for _ in ws]
+
+    def torus_serial():
+        return [torus_quad_placement(PARTS, topo, w) for w, topo in zip(ws, torus_topos)]
+
+    serial_tq, us_tq = timed(torus_serial, repeats=3)
+    # The search the construction replaces, on the identical torus configs.
+    (search_pls, _), us_search = timed(
+        place_batch,
+        traffics,
+        partitions,
+        torus_topos,
+        methods="greedy",
+        seeds=seeds,
+        backend="numpy",
+        repeats=1,
+    )
+    h_ratio = float(
+        max(
+            c.weighted_hops(w) / max(s.weighted_hops(w), 1e-12)
+            for c, s, w in zip(serial_tq, search_pls, ws)
+        )
+    )
+    emit(
+        "placement/torus_greedy2opt_search",
+        us_search,
+        f"configs={n_cfg};h_constructive_over_searched_max={h_ratio:.4f}",
+    )
+    emit(
+        "placement/torus_construct_serial",
+        us_tq,
+        f"configs={n_cfg};search_time_saving={us_search / max(us_tq, 1e-9):.0f}x",
+    )
+    for backend in ("numpy", "jax"):
+        if backend == "jax":
+            try:
+                import jax  # noqa: F401
+            except ImportError:
+                continue
+        (sites, _), us = timed(
+            torus_construct_batch, ws, torus_topos, backend=backend, repeats=3
+        )
+        derived = f"speedup={us_tq / max(us, 1e-9):.2f}x"
+        if backend == "numpy":  # the batched numpy constructor is bit-exact
+            parity = all(
+                np.array_equal(pl.site, s) for pl, s in zip(serial_tq, sites)
+            )
+            derived += f";bit_parity={parity}"
+        emit(f"placement/torus_construct_batched_{backend}", us, derived)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# CI entry point: gating tests, the EXPERIMENTS.md freshness audit, a
-# 3-config mini-sweep through the full trace → partition → place (batched
-# quad + greedy construction) → batched-simulate → report pipeline, and the
-# resumable dry-run artifact sweep.
+# CI entry point: the FULL tier-1 suite as the gate, the EXPERIMENTS.md
+# freshness audit, a 3-config mini-sweep through the full trace → partition →
+# place (batched quad + greedy construction) → batched-simulate → report
+# pipeline, and the resumable dry-run artifact sweep.
 #
-# The gate covers the paper-core + experiments suites, which are green.
-# The arch/models/distributed suites have known seed failures (tracked in
-# ROADMAP.md); run the whole tier-1 suite non-gating with VERIFY_FULL=1.
+# The whole suite gates: the last 5 seed failures (roofline HLO parse,
+# elastic reshard restore, the 3 multi-device subprocess meshes) were fixed
+# by the jax-0.4 compat shims (src/repro/compat.py), so there is no
+# "pre-existing failures" carve-out any more.  Property tests never skip:
+# tests/_hypothesis_compat.py vendors a minimal fallback runner when the
+# offline container has no hypothesis wheel.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,24 +20,12 @@ if python -c "import hypothesis" 2>/dev/null; then
 elif pip install -q "hypothesis>=6" 2>/dev/null || pip install -q -e ".[test]" 2>/dev/null; then
     echo "installed hypothesis via the [test] extra"
 else
-    echo "WARNING: hypothesis unavailable (offline container without a wheel);"
-    echo "         property tests will skip individually (tests/_hypothesis_compat.py)"
+    echo "hypothesis unavailable (offline container without a wheel);"
+    echo "property tests run on the vendored fallback (tests/_hypothesis_compat.py)"
 fi
 
-echo "== gating tests (paper core + experiments) =="
-python -m pytest -x -q \
-    tests/test_core_partition.py \
-    tests/test_core_placement.py \
-    tests/test_placement_batch.py \
-    tests/test_simulator_and_traffic.py \
-    tests/test_graph_algorithms.py \
-    tests/test_kernels.py \
-    tests/test_experiments_sweep.py
-
-if [[ "${VERIFY_FULL:-0}" == "1" ]]; then
-    echo "== full tier-1 suite (non-gating; seed failures tracked in ROADMAP.md) =="
-    python -m pytest -q || true
-fi
+echo "== gating tests (full tier-1 suite) =="
+python -m pytest -x -q
 
 echo "== EXPERIMENTS.md freshness vs committed payloads =="
 python -m repro.experiments.report --check

@@ -1,0 +1,75 @@
+"""jax 0.4 ↔ 0.5 API compatibility shims, installable in one call.
+
+The pinned container runs jax 0.4.37, where several jax ≥ 0.5 APIs that the
+test-suite and launch code use don't exist yet:
+
+  * ``jax.sharding.AxisType``      (mesh axis typing)
+  * ``jax.set_mesh``               (ambient-mesh context manager)
+  * ``jax.shard_map``              (top-level shard_map, ``check_vma`` kwarg)
+  * ``jax.make_mesh(axis_types=)`` (the kwarg, not the function)
+
+`install_jax05_compat()` patches each one onto the installed jax ONLY when
+it is missing, mapping to the 0.4 equivalent (`Mesh` as its own context
+manager, `jax.experimental.shard_map` with ``check_rep``, dropping
+``axis_types`` — 0.4 meshes are Auto-typed already).  On jax ≥ 0.5 the call
+is a no-op, so both branches stay honest for the ROADMAP jax-version matrix.
+
+Installed by tests/conftest.py for the in-process suite and by the
+subprocess prelude in tests/test_multidevice_subprocess.py (the spawned
+multi-device runs need the same shims AFTER their XLA_FLAGS are set but
+before jax initialises).  Library code keeps its local call-site shims
+(`models.sharding.compat_shard_map`, `launch.mesh._axis_type_kwargs`,
+`configs/base.ProgramCase.lower`) — those work without any global patching;
+this module exists for code written against the 0.5 surface, like the tests.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+__all__ = ["install_jax05_compat"]
+
+
+def install_jax05_compat() -> None:
+    """Idempotently backfill the jax ≥ 0.5 APIs listed above on jax 0.4."""
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):  # mirrors jax.sharding.AxisType (0.5)
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "set_mesh"):
+        # On 0.4 a physical Mesh is its own context manager and sets the
+        # ambient mesh that models.sharding.active_mesh() reads.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map04
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False, **kw):
+            # 0.4 spells the replication-check kwarg check_rep.
+            return _shard_map04(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, **kw,
+            )
+
+        jax.shard_map = shard_map
+
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic callables
+        params = {}
+    if "axis_types" not in params and not getattr(jax.make_mesh, "_repro_compat", False):
+        _make_mesh04 = jax.make_mesh
+
+        @functools.wraps(_make_mesh04)
+        def make_mesh(*args, axis_types=None, **kw):
+            return _make_mesh04(*args, **kw)  # 0.4 meshes are Auto-typed
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh

@@ -7,9 +7,13 @@ Eq. 1 (a few hub shards carry most f_ij, so collapsing *their* routes is
 where the Fig. 7 2–5× speedup comes from).  This is a quadratic assignment
 problem; the paper calls it an ILP — we provide the standard linearised MILP
 (exact, small instances, via scipy/HiGHS), the paper's regular constructive
-layout (Algorithm 3 / Fig. 4), a traffic-weighted greedy + 2-opt for large
-meshes, a brute-force oracle for tests, and the randomized baseline the paper
-compares against (Fig. 5).
+layout (Algorithm 3 / Fig. 4), torus-native constructive layouts
+(`torus_quad_placement` / `torus_columnar_placement`: wrap-aware quads and
+hub columns that cluster the power-law hub parts around the coordinate seam
+— the quad variant beats greedy+2-opt on torus2d with no search at all), a
+traffic-weighted greedy + 2-opt for large meshes, a brute-force oracle for
+tests, and the
+randomized baseline the paper compares against (Fig. 5).
 
 Delta-kernel math (the shared heart of every search path here and of the
 batched engine in `repro.experiments.placement_batch`):
@@ -51,6 +55,12 @@ __all__ = [
     "random_placement",
     "columnar_placement",
     "quad_placement",
+    "part_traffic_weights",
+    "torus_quad_cells",
+    "torus_hub_columns",
+    "torus_cell_site_table",
+    "torus_quad_placement",
+    "torus_columnar_placement",
     "greedy_seed",
     "greedy_placement",
     "symmetrize_weights",
@@ -151,6 +161,11 @@ def columnar_placement(num_parts: int, topology: Topology) -> Placement:
     return Placement(topology, site, "columnar")
 
 
+# Within-cell structure offsets shared by the quad layouts: ET adjacent to
+# vprop and vtemp; eprop adjacent to vprop and vtemp (the heavy Fig. 3 pairs).
+_QUAD_OFFSET = {ET: (0, 0), VPROP: (0, 1), VTEMP: (1, 0), EPROP: (1, 1)}
+
+
 def quad_placement(num_parts: int, topology: Topology) -> Placement:
     """Each rank's four shards in a 2×2 quad, quads tiled in snake order.
 
@@ -166,15 +181,173 @@ def quad_placement(num_parts: int, topology: Topology) -> Placement:
         raise ValueError("not enough 2x2 quads")
     lookup = _site_lookup(topology)
     site = np.empty(4 * num_parts, dtype=np.int64)
-    # ET adjacent to vprop and vtemp; eprop adjacent to vprop and vtemp.
-    offset = {ET: (0, 0), VPROP: (0, 1), VTEMP: (1, 0), EPROP: (1, 1)}
     for p in range(num_parts):
         gx, gy = p % qx, p // qx
         if gy % 2 == 1:  # snake rows keep consecutive ranks adjacent
             gx = qx - 1 - gx
-        for struct, (dx, dy) in offset.items():
+        for struct, (dx, dy) in _QUAD_OFFSET.items():
             site[struct * num_parts + p] = lookup[(2 * gx + dx, 2 * gy + dy)]
     return Placement(topology, site, "quad")
+
+
+def _ring_adjacent_pairs(k: int) -> list[tuple[int, int]]:
+    """Disjoint wrap-adjacent index pairs on a k-ring, the seam pair first:
+    (k−1, 0), (1, 2), (3, 4), …  — ⌊k/2⌋ pairs (one interior index is left
+    over when k is odd).  Leading with the seam pair is what makes the torus
+    layouts below wrap-aware: the hub quad/columns span the coordinate seam,
+    which only a torus can make adjacent."""
+    pairs = [(k - 1, 0)]
+    a = 1
+    while a + 1 <= k - 2:
+        pairs.append((a, a + 1))
+        a += 2
+    return pairs
+
+
+def _ring_distance(a: int, b: int, k: int) -> int:
+    d = abs(a - b)
+    return min(d, k - d)
+
+
+def part_traffic_weights(w2: np.ndarray, num_parts: int) -> np.ndarray:
+    """Per-part incident traffic from doubled (…, 4P, 4P) shard weights:
+    pw[…, p] = Σ over the 4 shards of part p of their total row weight.
+    Leading batch dimensions pass through unchanged — the serial constructors
+    here and the stacked constructor in
+    `repro.experiments.placement_batch.torus_construct_batch` call this SAME
+    reduction (identical summation tree per config), so the hub orderings —
+    and therefore the layouts — cannot drift between the two paths."""
+    n = w2.shape[-1]
+    shaped = w2.reshape(*w2.shape[:-2], 4, num_parts, n)
+    return shaped.sum(axis=(-3, -1))
+
+
+def torus_quad_cells(kx: int, ky: int) -> list[tuple[tuple[int, int], tuple[int, int]]]:
+    """Wrap-aware 2×2 quad cells of a kx×ky torus in hub-first order.
+
+    Each cell is ((xa, xb), (ya, yb)) — two wrap-adjacent columns × two
+    wrap-adjacent rows.  The first cell is the SEAM quad ((kx−1, 0),
+    (ky−1, 0)): its four routers occupy the corners of the coordinate map yet
+    are pairwise torus-adjacent, which no mesh cell can be.  Cells are sorted
+    by torus distance from that seam anchor (ties broken by grid index), so
+    assigning parts heaviest-first clusters the hub quads around the seam —
+    wrap-adjacent across it — and pushes light parts toward the antipode."""
+    xp = _ring_adjacent_pairs(kx)
+    yp = _ring_adjacent_pairs(ky)
+    cells = []
+    for gy, (ya, yb) in enumerate(yp):
+        for gx, (xa, xb) in enumerate(xp):
+            dist = _ring_distance(xa, kx - 1, kx) + _ring_distance(ya, ky - 1, ky)
+            cells.append((dist, gx, gy, ((xa, xb), (ya, yb))))
+    cells.sort(key=lambda c: c[:3])
+    return [c[3] for c in cells]
+
+
+def torus_hub_columns(kx: int) -> list[int]:
+    """Column indices of a kx-ring in hub-first order: 0, then alternating
+    outward by ring distance (1, kx−1, 2, kx−2, …).  Consecutive entries stay
+    within ring distance 1 of the already-used set, so heavy columns cluster
+    around column 0 — wrap-adjacent across the seam (column kx−1 sits next to
+    column 0 only on a torus)."""
+    return sorted(range(kx), key=lambda x: (_ring_distance(x, 0, kx), x))
+
+
+def torus_cell_site_table(topology: Topology, method: str = "torus_quad") -> np.ndarray:
+    """(num_cells, 4) router ids of a torus-native constructive layout: row =
+    hub-ranked cell, column = structure index (ET, vprop, vtemp, eprop).
+
+    The SINGLE source of the torus layouts' geometry: the serial constructors
+    below index it with their hub part order, and the stacked constructor
+    (`repro.experiments.placement_batch.torus_construct_batch`) stacks these
+    tables across configs — so the two paths share every site, bit for bit.
+    """
+    if not isinstance(topology, Torus2D):
+        raise ValueError(f"{method} placement needs a Torus2D topology")
+    kx, ky = topology.kx, topology.ky
+    rows: list[list[int]] = []
+    lookup = _site_lookup(topology)
+    if method == "torus_quad":
+        if kx < 2 or ky < 2:
+            raise ValueError("torus too small for 2x2 quads")
+        for xs, ys in torus_quad_cells(kx, ky):
+            rows.append(
+                [lookup[(xs[dx], ys[dy])] for _, (dx, dy) in sorted(_QUAD_OFFSET.items())]
+            )
+    elif method == "torus_columnar":
+        bands = ky // 4
+        if bands == 0:
+            raise ValueError("columnar layout needs ky >= 4")
+        # Row bands bottom→top: eprop, vtemp, vprop, ET (as in
+        # columnar_placement) — when 4 | ky the ET top band is also adjacent
+        # to the eprop bottom band through the y wrap.
+        band_of = {EPROP: 0, VTEMP: 1, VPROP: 2, ET: 3}
+        for sub in range(bands):
+            for x in torus_hub_columns(kx):
+                rows.append(
+                    [lookup[(x, band_of[s] * bands + sub)] for s in range(4)]
+                )
+    else:
+        raise ValueError(f"unknown torus layout {method!r}")
+    return np.array(rows, dtype=np.int64)
+
+
+def _torus_hub_order(num_parts: int, weights: np.ndarray | None) -> np.ndarray:
+    """Parts in descending incident-traffic order (stable; identity without
+    weights) — which part gets which hub-ranked cell."""
+    if weights is None:
+        return np.arange(num_parts)
+    w = np.asarray(weights, dtype=np.float64)
+    return np.argsort(-part_traffic_weights(w + w.T, num_parts), kind="stable")
+
+
+def _assemble_torus_layout(
+    topology: Topology, method: str, num_parts: int, weights: np.ndarray | None
+) -> Placement:
+    table = torus_cell_site_table(topology, method)
+    if len(table) < num_parts:
+        raise ValueError(f"torus too small for {method} layout of {num_parts} parts")
+    order = _torus_hub_order(num_parts, weights)
+    site = np.empty(4 * num_parts, dtype=np.int64)
+    for rank, p in enumerate(order):
+        for struct in range(4):
+            site[struct * num_parts + p] = table[rank, struct]
+    return Placement(topology, site, method)
+
+
+def torus_quad_placement(
+    num_parts: int, topology: Topology, weights: np.ndarray | None = None
+) -> Placement:
+    """Torus-native constructive quad layout (the mesh `quad_placement`
+    rethought under the wrap metric — ROADMAP "Torus-aware constructive
+    layouts").
+
+    Every part's four shards land in one wrap-adjacent 2×2 cell (all
+    communicating intra-part pairs at torus distance 1, the constructive
+    optimum), cells come from `torus_quad_cells` (seam quad first, then by
+    torus distance from it), and parts are assigned heaviest-first by
+    `part_traffic_weights` — so the hub parts that dominate the power-law
+    f_ij sit clustered around the seam, wrap-adjacent across it.  Pure
+    construction: no search follows (`place` returns it as-is), yet on every
+    torus-grid config it beats greedy+2-opt H (asserted in
+    tests/test_core_placement.py; measured in EXPERIMENTS.md §Torus).
+    """
+    return _assemble_torus_layout(topology, "torus_quad", num_parts, weights)
+
+
+def torus_columnar_placement(
+    num_parts: int, topology: Topology, weights: np.ndarray | None = None
+) -> Placement:
+    """Torus-native Algorithm-3 layout: `columnar_placement`'s row bands with
+    rank columns assigned hub-first in `torus_hub_columns` order, so the
+    heavy-traffic parts occupy columns clustered around the seam (column
+    kx−1 is wrap-adjacent to column 0).
+
+    Explicit-only (never an "auto" route): like the paper's mesh columnar
+    layout it is a regular reference layout, not a search replacement — its
+    H trails greedy+2-opt.  The ET-band/eprop-band y-seam adjacency holds
+    when ky is a multiple of 4 (otherwise the top ky % 4 rows are unused and
+    sit between the bands)."""
+    return _assemble_torus_layout(topology, "torus_columnar", num_parts, weights)
 
 
 def greedy_seed(doubled_weights: np.ndarray, d: np.ndarray) -> tuple[int, int]:
@@ -484,13 +657,20 @@ def brute_force_placement(weights: np.ndarray, topology: Topology) -> Placement:
 
 def resolve_method(num_logical: int, num_parts: int, topology: Topology, method: str) -> str:
     """Resolve "auto" to a concrete placement method: the exact MILP for tiny
-    instances, the quad layout when 2×2 quads fit the mesh family, traffic-
-    weighted greedy otherwise.  Shared by `place` and the batched engine so
-    the two paths always pick the same search for the same config."""
+    instances, the torus-native constructive layouts on a torus, the quad
+    layout when 2×2 quads fit the mesh family, traffic-weighted greedy
+    otherwise.  Shared by `place` and the batched engine so the two paths
+    always pick the same search for the same config."""
     if method != "auto":
         return method
     if num_logical <= 16 and topology.num_nodes <= 16:
         return "ilp"
+    # Only the quad construction may REPLACE the search: torus_quad beats
+    # greedy+2-opt on every fit case (property-tested), while torus_columnar
+    # — like the mesh columnar layout — is a paper-faithful regular layout
+    # that measures ~2× worse H than the search and stays explicit-only.
+    if isinstance(topology, Torus2D) and _quad_fits(num_parts, topology):
+        return "torus_quad"
     if isinstance(topology, (Mesh2D, FlattenedButterfly)) and _quad_fits(num_parts, topology):
         return "quad"
     return "greedy"
@@ -509,7 +689,11 @@ def place(
 
     paper_faithful_fij=True optimises the paper's binary equal-rank f_ij;
     False (default) optimises measured traffic bytes (our extension).
-    method: auto | random | columnar | quad | greedy | ilp.
+    method: auto | random | columnar | quad | torus_quad | torus_columnar |
+    greedy | ilp.  The torus_* layouts are pure constructions — no 2-opt
+    refinement follows (for torus_quad, H ≤ greedy+2-opt on torus fit cases
+    anyway, which is what makes it the torus2d auto route; see
+    torus_quad_placement).
     """
     weights = traffic.binary_fij(partition) if paper_faithful_fij else traffic.bytes_matrix
     n = traffic.num_logical
@@ -518,6 +702,10 @@ def place(
         return random_placement(n, topology, seed=seed)
     if method == "columnar":
         return columnar_placement(traffic.num_parts, topology)
+    if method == "torus_quad":
+        return torus_quad_placement(traffic.num_parts, topology, weights)
+    if method == "torus_columnar":
+        return torus_columnar_placement(traffic.num_parts, topology, weights)
     if method == "quad":
         return two_opt(quad_placement(traffic.num_parts, topology), weights, iters=500, seed=seed)
     if method == "greedy":

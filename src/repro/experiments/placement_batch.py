@@ -38,6 +38,15 @@ tests/test_placement_batch.py).  The jax backend replaces that rare RNG
 fallback with the first unplaced shard (deterministic under jit) — same
 neighbourhood, documented divergence, H-parity still measured per sweep.
 
+Construction (`torus_construct_batch`).  Torus2d "auto" configs don't
+search at all: the wrap-aware quad layout (`core.placement.
+torus_quad_placement`) already beats greedy+2-opt H on torus fit cases, so
+`place_batch` assembles it stacked — one part-weight reduction + stable
+argsort + scatter over all configs — with the same parity contract as the
+greedy constructor (numpy bit-exact to the serial layouts; jax up to f32
+near-tie reordering of hub parts).  The explicit-only `torus_columnar`
+reference layout rides the same stacked engine.
+
 Mirroring `simulate_batch`, configs are grouped by problem shape (n logical
 shards, S routers) — each group is one stacked program; topologies may
 differ inside a group (the per-config distance matrices are stacked).
@@ -59,6 +68,7 @@ adversarial instance where a single steepest path lands high.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -69,10 +79,12 @@ from repro.core.placement import (
     Placement,
     default_max_steps,
     greedy_seed,
+    part_traffic_weights,
     quad_placement,
     place,
     resolve_method,
     symmetrize_weights,
+    torus_cell_site_table,
 )
 from repro.core.traffic import TrafficMatrix
 from repro.experiments.batched import resolve_backend
@@ -80,14 +92,22 @@ from repro.experiments.batched import resolve_backend
 __all__ = [
     "batch_descend",
     "greedy_construct_batch",
+    "torus_construct_batch",
     "place_batch",
     "PlacementBatchStats",
     "BATCH_SEARCH_METHODS",
+    "BATCH_CONSTRUCT_METHODS",
 ]
 
 # Methods the batched engine searches; everything else (random, columnar, the
 # exact MILP) goes through the serial `place` reference path.
 BATCH_SEARCH_METHODS = frozenset({"quad", "greedy"})
+
+# Torus-native constructive layouts: stacked across configs by
+# `torus_construct_batch` — no descent follows (torus_quad already beats
+# greedy+2-opt H on torus fit cases and is the torus2d auto route;
+# torus_columnar is an explicit-only reference layout; see core.placement).
+BATCH_CONSTRUCT_METHODS = frozenset({"torus_quad", "torus_columnar"})
 
 # Marks a batched-engine result in `Placement.method` ("quad+2opt[batch]") —
 # scripts/verify.sh and the sweep stats key off the engine having run.
@@ -102,10 +122,17 @@ class PlacementBatchStats:
     serial_configs: int = 0
     greedy_constructed: int = 0  # configs whose init came from the batched
     #                              greedy constructor (vs quad / serial paths)
+    torus_constructed: int = 0  # configs placed by the stacked torus-native
+    #                             constructive layouts (no descent at all)
     groups: int = 0
     steps: int = 0  # total best-move steps across groups (max over configs)
     backend: str = "numpy"  # ","-joined when (n,S) groups resolve differently
     restarts: int = 0
+    # Stage-time split (seconds): what the searched configs paid (stacked
+    # greedy construction + steepest descent) vs what the torus-constructive
+    # configs paid (layout assembly only) — the §Torus search-time saving.
+    search_s: float = 0.0
+    construct_s: float = 0.0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -252,6 +279,104 @@ def greedy_construct_batch(
     backend = resolve_backend(backend, int(w2.size + d.size))
     construct = _greedy_construct_jax if backend == "jax" else _greedy_construct_numpy
     sites = construct(w2, d, seeds_l)
+    return list(sites), backend
+
+
+# ---------------------------------------------------------------------------
+# batched torus-native construction (wrap-aware quads / hub columns, stacked)
+# ---------------------------------------------------------------------------
+
+
+def _torus_construct_numpy(w2: np.ndarray, cell_sites: np.ndarray) -> np.ndarray:
+    """Stacked torus layout assembly, bit-identical to
+    `core.placement.torus_quad_placement` / `torus_columnar_placement` per
+    config: `w2` (C, n, n) doubled weights, `cell_sites` (C, P, 4) hub-ranked
+    cell tables.  One stacked part-weight reduction (the same summation tree
+    as the serial `part_traffic_weights` call), one stable argsort per
+    config, one scatter."""
+    c, n, _ = w2.shape
+    p = n // 4
+    pw = part_traffic_weights(w2, p)  # (C, P)
+    orders = np.argsort(-pw, axis=1, kind="stable")
+    site = np.empty((c, n), dtype=np.int64)
+    cidx = np.arange(c)[:, None]
+    for struct in range(4):
+        site[cidx, struct * p + orders] = cell_sites[:, :, struct]
+    return site
+
+
+_JAX_TORUS = None
+
+
+def _jax_torus_fn():
+    """Build (once) the jitted stacked torus constructor; jit re-specialises
+    per (C, n) group shape automatically."""
+    global _JAX_TORUS
+    if _JAX_TORUS is not None:
+        return _JAX_TORUS
+    import jax
+    import jax.numpy as jnp
+
+    def construct(w2, cell_sites):
+        c, n, _ = w2.shape
+        p = n // 4
+        pw = w2.reshape(c, 4, p, n).sum(axis=(1, 3))
+        orders = jnp.argsort(-pw, axis=1)  # jax argsort is stable
+        site = jnp.zeros((c, n), dtype=jnp.int32)
+        cidx = jnp.arange(c)[:, None]
+        for struct in range(4):
+            site = site.at[cidx, struct * p + orders].set(cell_sites[:, :, struct])
+        return site
+
+    _JAX_TORUS = jax.jit(construct)
+    return _JAX_TORUS
+
+
+def _torus_construct_jax(w2: np.ndarray, cell_sites: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    c = w2.shape[0]
+    # Same per-config normalisation as the other jax paths: argsort is
+    # scale-invariant, so this cannot change the hub ordering beyond f32
+    # rounding of near-ties (documented divergence, H-parity still tested).
+    scale = np.maximum(w2.reshape(c, -1).max(axis=1), 1.0)[:, None, None]
+    sites = _jax_torus_fn()(jnp.asarray(w2 / scale), jnp.asarray(cell_sites, dtype=np.int32))
+    return np.asarray(sites, dtype=np.int64)
+
+
+def torus_construct_batch(
+    weights: list[np.ndarray] | np.ndarray,
+    topologies: list[Topology],
+    *,
+    methods: list[str] | str = "torus_quad",
+    backend: str = "auto",
+) -> tuple[list[np.ndarray], str]:
+    """Batched torus-native constructive layouts for C configs of identical
+    (n = 4P) shape: `weights` raw (n, n) per config (doubled internally),
+    `topologies` one Torus2D per config (mixed sizes of equal node count
+    stack — each config's own `torus_cell_site_table` rides the batch),
+    `methods` torus_quad | torus_columnar per config.  Returns (site arrays
+    in input order, backend used).  Same parity contract as
+    `greedy_construct_batch`: the numpy backend is bit-identical to the
+    serial constructors per config; jax matches up to f32 rounding of
+    near-tied hub weights (H-parity asserted in tests)."""
+    methods_l = [methods] * len(topologies) if isinstance(methods, str) else list(methods)
+    if len(methods_l) != len(topologies):
+        raise ValueError("methods must match the config count")
+    w2 = np.stack(
+        [np.asarray(w, dtype=np.float64) + np.asarray(w, dtype=np.float64).T for w in weights]
+    )
+    p = w2.shape[-1] // 4
+    tables = []
+    for topo, m in zip(topologies, methods_l):
+        table = torus_cell_site_table(topo, m)
+        if len(table) < p:
+            raise ValueError(f"torus too small for {m} layout of {p} parts")
+        tables.append(table[:p])
+    cell_sites = np.stack(tables)
+    backend = resolve_backend(backend, int(w2.size))
+    construct = _torus_construct_jax if backend == "jax" else _torus_construct_numpy
+    sites = construct(w2, cell_sites)
     return list(sites), backend
 
 
@@ -477,9 +602,13 @@ def place_batch(
     Per config the method is resolved exactly as `place` resolves it
     (`core.placement.resolve_method`); configs whose method lands in
     `BATCH_SEARCH_METHODS` are refined by the stacked steepest-descent engine
-    (grouped by (n, S) problem shape), everything else — random/columnar
-    layouts, the exact MILP, odd topologies that only the constructive paths
-    serve — falls through to the serial `place` reference.  `restarts` extra
+    (grouped by (n, S) problem shape), configs landing in
+    `BATCH_CONSTRUCT_METHODS` (torus2d under "auto") get their torus-native
+    layout from one stacked `torus_construct_batch` assembly per shape group
+    — no descent, the `construct_s`-vs-`search_s` stage split in the stats —
+    and everything else — random/columnar layouts, the exact MILP, odd
+    topologies that only the constructive paths serve — falls through to the
+    serial `place` reference.  `restarts` extra
     perturbed-init descents per config ride the same batch and the best H
     wins; the default 0 keeps the stage cost at one convergence (structured
     inits land in a 2-opt optimum within a few steps, and H-parity vs the
@@ -499,11 +628,16 @@ def place_batch(
     results: list[Placement | None] = [None] * n_cfg
     stats = PlacementBatchStats(restarts=restarts)
     groups: dict[tuple[int, int], list[int]] = {}
+    torus_groups: dict[tuple[int, int], list[int]] = {}
     weights_all: list[np.ndarray | None] = [None] * n_cfg
     resolved: list[str] = [""] * n_cfg
     for idx, (t, p, topo, m) in enumerate(zip(traffics, partitions, topologies, methods_l)):
         m = resolve_method(t.num_logical, t.num_parts, topo, m)
         resolved[idx] = m
+        if m in BATCH_CONSTRUCT_METHODS:
+            weights_all[idx] = t.binary_fij(p) if paper_faithful_fij else t.bytes_matrix
+            torus_groups.setdefault((t.num_logical, topo.num_nodes), []).append(idx)
+            continue
         if m not in BATCH_SEARCH_METHODS:
             results[idx] = place(
                 t, p, topo, method=m, paper_faithful_fij=paper_faithful_fij, seed=seeds_l[idx]
@@ -514,7 +648,27 @@ def place_batch(
         groups.setdefault((t.num_logical, topo.num_nodes), []).append(idx)
 
     backends_used: set[str] = set()
+    # Torus-native constructive configs: one stacked layout assembly per
+    # (n, S) shape group, no descent — the search-time saving §Torus reports.
+    for (_n, _s), idxs in torus_groups.items():
+        t0 = time.perf_counter()
+        sites_out, cons_backend = torus_construct_batch(
+            [weights_all[i] for i in idxs],
+            [topologies[i] for i in idxs],
+            methods=[resolved[i] for i in idxs],
+            backend=backend,
+        )
+        stats.construct_s += time.perf_counter() - t0
+        backends_used.add(cons_backend)
+        stats.backend = ",".join(sorted(backends_used))
+        stats.torus_constructed += len(idxs)
+        stats.groups += 1
+        for i, s_arr in zip(idxs, sites_out):
+            results[i] = Placement(
+                topologies[i], np.asarray(s_arr, dtype=np.int64), resolved[i]
+            )
     for (n, _s), idxs in groups.items():
+        t_group = time.perf_counter()
         # Initial layouts: quad configs use the O(n) constructive tiling per
         # config; greedy configs run ONE stacked argmax-insertion program for
         # the whole group (the former per-config greedy_placement loop).
@@ -566,4 +720,5 @@ def place_batch(
             if i not in best_h or h < best_h[i]:
                 best_h[i] = h
                 results[i] = pl
+        stats.search_s += time.perf_counter() - t_group
     return results, stats  # type: ignore[return-value]

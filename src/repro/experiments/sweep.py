@@ -200,6 +200,7 @@ def run_sweep(
     say(
         f"[sweep:{grid.name}] placement: {pstats.batched_configs} searched "
         f"({pstats.greedy_constructed} greedy-constructed, stacked), "
+        f"{pstats.torus_constructed} torus-constructed (no search), "
         f"{pstats.serial_configs} constructive/serial, {pstats.groups} shape group(s)"
     )
     t_placement_serial = None

@@ -1,51 +1,102 @@
 """Optional-hypothesis shim: `from _hypothesis_compat import given, settings, st`.
 
 When hypothesis is installed (the `[test]` extra, see pyproject.toml) the real
-decorators are re-exported unchanged.  When it is absent the property tests
-skip individually at run time instead of killing collection for the whole
-file, so the plain unit tests in the same module still run.
+decorators are re-exported unchanged.  When it is absent — the offline CI
+container has no wheel — a minimal VENDORED fallback runner takes over
+instead of skipping: each `@given` test runs `settings(max_examples=…)`
+deterministic pseudo-random examples (seeded from the test's qualname, so
+failures reproduce across runs and machines).  The fallback implements just
+the strategy surface this suite uses (`integers`, `booleans`, `floats`,
+`sampled_from`, `tuples`); anything fancier should go through real
+hypothesis.  No shrinking — the failing example is reported as-is.
 """
 from __future__ import annotations
-
-import functools
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without hypothesis
-    import pytest
+    import random
+    import zlib
 
     HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+    _SETTINGS_ATTR = "_fallback_max_examples"
 
-    def given(*_args, **_kwargs):
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        """The subset of hypothesis.strategies the fallback runner supports."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            lo = 0 if min_value is None else int(min_value)
+            hi = lo + 2**16 if max_value is None else int(max_value)
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        def __getattr__(self, name):  # anything else: fail loudly, not subtly
+            raise NotImplementedError(
+                f"strategies.{name} is not implemented by the vendored "
+                "hypothesis fallback (tests/_hypothesis_compat.py); "
+                "pip install hypothesis or extend the fallback"
+            )
+
+    st = _Strategies()
+
+    def settings(*_args, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
         def deco(fn):
-            @functools.wraps(fn)
-            def skipper(*args, **kwargs):
-                pytest.skip("hypothesis not installed (pip install hypothesis)")
-
-            # functools.wraps copies __wrapped__, which would make pytest
-            # resolve the original argument names as fixtures; drop it so the
-            # (*args, **kwargs) signature (no fixture requests) is seen.
-            del skipper.__wrapped__
-            return skipper
-
-        return deco
-
-    def settings(*_args, **_kwargs):
-        def deco(fn):
+            setattr(fn, _SETTINGS_ATTR, max_examples)
             return fn
 
         return deco
 
-    class _AnyStrategy:
-        """Placeholder for `strategies`: any attribute is a callable stub."""
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(
+                    runner, _SETTINGS_ATTR, getattr(fn, _SETTINGS_ATTR, _DEFAULT_MAX_EXAMPLES)
+                )
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random(base * 1_000_003 + i)
+                    drawn = [s.draw(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.draw(rng) for k, s in sorted(kw_strategies.items())}
+                    try:
+                        fn(*args, *drawn, **drawn_kw, **kwargs)
+                    except Exception as e:
+                        example = drawn or drawn_kw
+                        raise AssertionError(
+                            f"[vendored-hypothesis fallback] falsifying example "
+                            f"#{i + 1}/{n} of {fn.__qualname__}: {example!r}"
+                        ) from e
 
-        def __getattr__(self, name):
-            def strategy(*args, **kwargs):
-                return None
+            # The (*args, **kwargs) signature is deliberate: pytest must not
+            # resolve the wrapped function's own argument names as fixtures.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
 
-            strategy.__name__ = name
-            return strategy
-
-    st = _AnyStrategy()
+        return deco

@@ -7,13 +7,20 @@ from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
 from repro.core.partition import powerlaw_partition, random_partition
 from repro.core.placement import (
     Placement,
+    auto_mesh_for_parts,
     brute_force_placement,
     columnar_placement,
     greedy_placement,
     ilp_placement,
+    part_traffic_weights,
     place,
     quad_placement,
     random_placement,
+    resolve_method,
+    torus_columnar_placement,
+    torus_hub_columns,
+    torus_quad_cells,
+    torus_quad_placement,
     two_opt,
 )
 from repro.core.traffic import traffic_from_partition
@@ -134,6 +141,102 @@ class TestPlacementOptimality:
         topo = Mesh2D(2, 2)
         with pytest.raises(ValueError):
             Placement(topo, np.array([0, 0, 1]), "bad")
+
+
+def _torus_traffic(num_parts, seed=0, nv=150, ne=1200):
+    g = rmat(nv, ne, seed=seed)
+    part = powerlaw_partition(g.src, g.dst, g.num_nodes, num_parts)
+    traffic = traffic_from_partition(part, g.src, g.dst)
+    return traffic, part, auto_mesh_for_parts(num_parts, "torus2d")
+
+
+class TestTorusNativeLayouts:
+    """The torus-aware constructive family (this PR's tentpole): wrap-aware
+    quads/hub columns that beat greedy+2-opt on torus2d with no search."""
+
+    def test_seam_quad_cell_comes_first_and_cells_are_disjoint(self):
+        cells = torus_quad_cells(8, 8)
+        assert cells[0] == ((7, 0), (7, 0))  # the seam quad spans the wrap
+        used = set()
+        for xs, ys in cells:
+            for x in xs:
+                for y in ys:
+                    assert (x, y) not in used
+                    used.add((x, y))
+
+    def test_hub_quad_is_wrap_adjacent_across_the_seam(self):
+        """The heaviest part's four shards occupy the coordinate-map corners
+        — maximally far apart on a mesh — yet every communicating pair sits
+        at torus distance 1 through the seam."""
+        traffic, part, topo = _torus_traffic(16, seed=3, nv=400, ne=4000)
+        w = traffic.bytes_matrix
+        pl = torus_quad_placement(16, topo, w)
+        hub = int(np.argmax(part_traffic_weights(w + w.T, 16)))
+        coords = topo.coords()[pl.site[[s * 16 + hub for s in range(4)]]]
+        span = coords.max(0) - coords.min(0)
+        np.testing.assert_array_equal(span, [topo.kx - 1, topo.ky - 1])
+        fij = traffic.binary_fij(part)
+        d = topo.distance_matrix()
+        s = pl.site
+        ii, jj = np.nonzero(np.triu(fij))
+        intra = (ii % 16) == (jj % 16)
+        assert (d[s[ii[intra]], s[jj[intra]]] == 1).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), parts=st.sampled_from([9, 16]))
+    def test_constructive_beats_greedy_2opt_on_torus_fit_cases(self, seed, parts):
+        """Acceptance property: on every torus2d fit case the auto route
+        serves (quads fit, instance above the ILP cutoff), the pure
+        construction is never worse than the full greedy+2-opt search."""
+        traffic, _, topo = _torus_traffic(parts, seed=seed)
+        w = traffic.bytes_matrix
+        h_cons = torus_quad_placement(parts, topo, w).weighted_hops(w)
+        searched = two_opt(greedy_placement(w, topo, seed=seed), w, seed=seed)
+        assert h_cons <= searched.weighted_hops(w) + 1e-9
+
+    def test_resolve_method_routes_torus2d_to_constructive(self):
+        assert resolve_method(64, 16, Torus2D(8, 8), "auto") == "torus_quad"
+        assert resolve_method(100, 25, Torus2D(10, 10), "auto") == "torus_quad"
+        # quads don't fit → back to the search, NOT torus_columnar (the
+        # columnar layout is a regular reference, ~2× worse H than greedy)
+        assert resolve_method(40, 10, Torus2D(5, 8), "auto") == "greedy"
+        # tiny instances still go to the exact MILP, never the construction
+        assert resolve_method(16, 4, Torus2D(4, 4), "auto") == "ilp"
+        # the mesh family keeps its quad route
+        assert resolve_method(64, 16, Mesh2D(8, 8), "auto") == "quad"
+
+    def test_place_auto_returns_pure_construction_on_torus(self):
+        traffic, part, topo = _torus_traffic(9, seed=1)
+        pl = place(traffic, part, topo, method="auto")
+        assert pl.method == "torus_quad"  # no "+2opt": the search is skipped
+        ref = torus_quad_placement(9, topo, traffic.bytes_matrix)
+        np.testing.assert_array_equal(pl.site, ref.site)
+
+    def test_torus_layouts_reject_non_torus_topologies(self):
+        with pytest.raises(ValueError):
+            torus_quad_placement(4, Mesh2D(4, 4))
+        with pytest.raises(ValueError):
+            torus_columnar_placement(4, Mesh2D(4, 4))
+
+    def test_hub_columns_cluster_around_the_seam(self):
+        cols = torus_hub_columns(8)
+        assert cols[0] == 0 and set(cols[:3]) == {0, 1, 7}  # wrap-adjacent trio
+        assert sorted(cols) == list(range(8))
+
+    def test_torus_columnar_keeps_band_structure(self):
+        from repro.core.traffic import EPROP, ET
+
+        traffic, _, _ = _torus_traffic(4, seed=2, nv=64, ne=512)
+        topo = Torus2D(4, 4)
+        pl = torus_columnar_placement(4, topo, traffic.bytes_matrix)
+        coords = topo.coords()[pl.site].reshape(4, 4, 2)  # (struct, part, xy)
+        assert (coords[ET][:, 1] > coords[EPROP][:, 1]).all()
+        # hub part (heaviest) sits in column 0; its ET/eprop rows are
+        # wrap-adjacent through the y seam (|Δy| = ky-1 → torus distance 1)
+        hub = int(np.argmax(part_traffic_weights(
+            traffic.bytes_matrix + traffic.bytes_matrix.T, 4)))
+        assert coords[ET][hub, 0] == 0
+        assert coords[ET][hub, 1] - coords[EPROP][hub, 1] == topo.ky - 1
 
 
 class TestEndToEndMapping:

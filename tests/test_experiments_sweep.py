@@ -206,14 +206,16 @@ class TestGridAndSweep:
             grid_by_name("nope")
 
     def test_torus_grid_shape(self):
-        """The wrap-link grid crosses mesh2d/torus2d at two mesh sizes with
-        greedy pinned (every searched config takes the batched construction)."""
+        """The wrap-link grid crosses mesh2d/torus2d at two mesh sizes under
+        three schemes: pinned greedy (every searched config takes the batched
+        construction), the constructive `auto` arm (torus-native layouts on
+        torus2d, no search), and the random baseline."""
         grid = GRIDS["torus"]
         cfgs = grid.expand()
-        assert len(cfgs) == grid.num_configs == 48
+        assert len(cfgs) == grid.num_configs == 72
         assert {c.topology for c in cfgs} == {"mesh2d", "torus2d"}
         assert {c.num_parts for c in cfgs} == {16, 25}
-        assert {c.placement for c in cfgs} == {"greedy", "random"}
+        assert {c.placement for c in cfgs} == {"greedy", "auto", "random"}
         assert sum(c.is_baseline for c in cfgs) == 24
 
     def test_torus_sweep_smoke_through_run_cli(self, tmp_path):
@@ -233,9 +235,10 @@ class TestGridAndSweep:
         import json as json_lib
 
         payload = json_lib.load(open(tmp_path / "sweeps" / "torus.json"))
-        assert len(payload["records"]) == 48
+        assert len(payload["records"]) == 72
         ps = payload["placement_stats"]
-        assert ps["batched_configs"] == 24 and ps["greedy_constructed"] == 24
+        assert ps["batched_configs"] == 36 and ps["greedy_constructed"] == 24
+        assert ps["torus_constructed"] == 12  # the torus2d constructive arm
         assert ps["serial_configs"] == 24  # the random-layout baselines
         # The physical claim the grid exists to demonstrate: under the
         # randomized baseline (mesh-spanning routes) the wrap links must cut
@@ -254,10 +257,29 @@ class TestGridAndSweep:
         ]
         assert len(baseline_gains) == 12
         assert min(baseline_gains) > 1.1, baseline_gains
+        # The tentpole acceptance: on every torus2d cell the constructive
+        # torus-native layout (powerlaw+auto) matches or beats the full
+        # greedy+2-opt search (powerlaw+greedy) on byte-hops, with no search.
+        greedy_h = {
+            key[:2] + key[4:]: pair["torus2d"]["sim_byte_hops"]
+            for key, pair in cells.items()
+            if key[2] == "powerlaw" and key[3] == "greedy" and "torus2d" in pair
+        }
+        cons_h = {
+            key[:2] + key[4:]: pair["torus2d"]
+            for key, pair in cells.items()
+            if key[2] == "powerlaw" and key[3] == "auto" and "torus2d" in pair
+        }
+        assert len(cons_h) == len(greedy_h) == 12
+        for cell_key, rec in cons_h.items():
+            assert rec["placement_method"] == "torus_quad"  # no search ran
+            assert rec["sim_byte_hops"] <= greedy_h[cell_key] * (1 + 1e-9), cell_key
         from repro.experiments.report import _torus_section
 
         section = _torus_section(payload)
         assert "§Torus" in section and "wrap-link" in section.lower()
+        assert "Constructive torus layouts vs greedy+2-opt" in section
+        assert "search-time saving" in section
 
     def test_mini_sweep_end_to_end(self, tmp_path):
         grid = grid_by_name("mini")

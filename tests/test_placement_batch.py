@@ -19,6 +19,8 @@ from repro.core.placement import (
     random_placement,
     swap_delta_matrix,
     symmetrize_weights,
+    torus_columnar_placement,
+    torus_quad_placement,
     two_opt,
     two_opt_best_move,
 )
@@ -28,6 +30,7 @@ from repro.experiments.placement_batch import (
     batch_descend,
     greedy_construct_batch,
     place_batch,
+    torus_construct_batch,
 )
 from repro.graph.generators import rmat
 
@@ -265,6 +268,112 @@ class TestGreedyConstructBatch:
         for w, topo, out in zip(ws, topos, sites):
             ref = greedy_placement(w, topo, seed=int(seed) % 17)
             np.testing.assert_array_equal(out, ref.site)
+
+
+def _torus_configs(n_graphs=3, parts=16):
+    traffics, partitions, topologies = [], [], []
+    for i in range(n_graphs):
+        g = rmat(300, 2500, seed=i)
+        for part_fn in (powerlaw_partition, random_partition):
+            p = part_fn(g.src, g.dst, g.num_nodes, parts)
+            traffics.append(traffic_from_partition(p, g.src, g.dst))
+            partitions.append(p)
+            topologies.append(Torus2D(8, 8))
+    return traffics, partitions, topologies
+
+
+class TestTorusConstructBatch:
+    def test_numpy_bit_identical_to_serial_on_real_traffic(self):
+        """Tentpole parity: the stacked torus layout assembly equals the
+        serial constructors config by config (same contract as the greedy
+        constructor)."""
+        traffics, _, topologies = _torus_configs()
+        ws = [t.bytes_matrix for t in traffics]
+        sites, backend = torus_construct_batch(ws, topologies, backend="numpy")
+        assert backend == "numpy"
+        for w, topo, out in zip(ws, topologies, sites):
+            np.testing.assert_array_equal(out, torus_quad_placement(16, topo, w).site)
+        sites_c, _ = torus_construct_batch(
+            ws, topologies, methods="torus_columnar", backend="numpy"
+        )
+        for w, topo, out in zip(ws, topologies, sites_c):
+            np.testing.assert_array_equal(out, torus_columnar_placement(16, topo, w).site)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_batched_vs_serial_bit_exactness_property(self, seed):
+        """Property form: any weight stack, any torus size, any method mix —
+        batched == serial, exactly, on the numpy backend."""
+        rng = np.random.default_rng(seed)
+        parts = int(rng.integers(2, 9))
+        kx = int(rng.integers(2, 5)) * 2
+        # tall enough that 2x2 quads always fit; columnar fits when ky >= 4P/kx
+        ky = max(4, 2 * (-(-parts // (kx // 2))) + 2 * int(rng.integers(0, 2)))
+        topo = Torus2D(kx, ky)
+        c = int(rng.integers(1, 4))
+        ws = _random_weight_stack(seed + 1, 4 * parts, c, density=float(rng.uniform(0.2, 1.0)))
+        methods = []
+        for _ in range(c):
+            quad_ok = (kx // 2) * (ky // 2) >= parts
+            col_ok = parts <= kx * (ky // 4)
+            opts = (["torus_quad"] if quad_ok else []) + (["torus_columnar"] if col_ok else [])
+            methods.append(opts[int(rng.integers(len(opts)))])
+        sites, _ = torus_construct_batch(ws, [topo] * c, methods=methods, backend="numpy")
+        serial = {"torus_quad": torus_quad_placement, "torus_columnar": torus_columnar_placement}
+        for w, m, out in zip(ws, methods, sites):
+            np.testing.assert_array_equal(out, serial[m](parts, topo, w).site)
+
+    def test_jax_backend_valid_and_h_matches_numpy(self):
+        pytest.importorskip("jax")
+        traffics, _, topologies = _torus_configs(2)
+        ws = [t.bytes_matrix for t in traffics]
+        s_np, _ = torus_construct_batch(ws, topologies, backend="numpy")
+        s_jx, backend = torus_construct_batch(ws, topologies, backend="jax")
+        assert backend == "jax"
+        for w, topo, a, b in zip(ws, topologies, s_np, s_jx):
+            assert np.unique(b).size == len(b)  # injective layout
+            h_np = Placement(topo, a, "x").weighted_hops(w)
+            h_jx = Placement(topo, np.asarray(b), "x").weighted_hops(w)
+            # f32 near-ties may reorder equal-weight hub parts; converged
+            # quality must match to f32 tolerance.
+            assert h_jx == pytest.approx(h_np, rel=1e-3)
+
+    def test_place_batch_routes_auto_torus_to_stacked_construction(self):
+        """Acceptance: torus2d "auto" configs are torus-constructed (no
+        descent), carry the constructive method tag, match the serial
+        `place` path exactly, and record the construct/search time split."""
+        traffics, partitions, topologies = _torus_configs()
+        pls, stats = place_batch(
+            traffics, partitions, topologies, methods="auto", seeds=0, backend="numpy"
+        )
+        assert stats.torus_constructed == len(traffics)
+        assert stats.batched_configs == 0 and stats.serial_configs == 0
+        assert stats.steps == 0  # no descent ran
+        assert stats.construct_s > 0 and stats.search_s == 0
+        for t, p, topo, pl in zip(traffics, partitions, topologies, pls):
+            assert pl.method == "torus_quad"
+            serial = place(t, p, topo, method="auto", seed=0)
+            np.testing.assert_array_equal(pl.site, serial.site)
+
+    def test_mixed_torus_and_mesh_grid_splits_between_engines(self):
+        """A torus-grid-shaped mix: mesh2d configs descend, torus2d configs
+        construct — and the constructive H beats the searched H on the same
+        traffic (the §Torus acceptance)."""
+        traffics, partitions, _ = _torus_configs(2)
+        topologies = [Mesh2D(8, 8), Torus2D(8, 8)] * 2
+        pls, stats = place_batch(
+            traffics, partitions, topologies, methods="auto", seeds=0, backend="numpy"
+        )
+        assert stats.torus_constructed == 2 and stats.batched_configs == 2
+        greedy_pls, _ = place_batch(
+            traffics, partitions, topologies, methods="greedy", seeds=0, backend="numpy"
+        )
+        for t, topo, pl, searched in zip(traffics, topologies, pls, greedy_pls):
+            if isinstance(topo, Torus2D):
+                assert pl.method == "torus_quad"
+                assert pl.weighted_hops(t.bytes_matrix) <= searched.weighted_hops(
+                    t.bytes_matrix
+                ) + 1e-9
 
 
 class TestPlaceBatch:

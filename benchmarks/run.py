@@ -18,7 +18,16 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
-MODULES = ("skew", "data_movement", "hop_count", "placement", "speedup", "energy", "kernels_bench")
+MODULES = (
+    "skew",
+    "data_movement",
+    "hop_count",
+    "placement",
+    "speedup",
+    "energy",
+    "contention",
+    "kernels_bench",
+)
 
 
 def main(argv=None) -> None:

@@ -14,7 +14,15 @@ import itertools
 
 import numpy as np
 
-__all__ = ["Topology", "Mesh2D", "FlattenedButterfly", "Torus2D", "Torus3D", "topology_by_name"]
+__all__ = [
+    "Topology",
+    "Mesh2D",
+    "FlattenedButterfly",
+    "Torus2D",
+    "Torus3D",
+    "topology_by_name",
+    "dimension_ordered_links",
+]
 
 
 class Topology(abc.ABC):
@@ -40,18 +48,30 @@ class Topology(abc.ABC):
 
     def route_links(
         self, c0: tuple[int, ...], c1: tuple[int, ...]
-    ) -> list[tuple[int, int, int, int]] | None:
-        """Ordered unidirectional links (x0, y0, x1, y1) of the deterministic
-        dimension-ordered route c0 → c1, or None when the topology has no
-        exact per-link routing model (the simulator then falls back to the
-        uniform-spread approximation).
+    ) -> list[tuple[int, ...]] | None:
+        """Ordered unidirectional links (c_from + c_to, a 2·ndim int tuple) of
+        the deterministic dimension-ordered route c0 → c1, or None when the
+        topology has no exact per-link routing model (the simulator then
+        falls back to the uniform-spread approximation).
 
-        This is the single source of truth for link loads: both the serial
-        simulator (`core.simulator._per_link_peak_load`) and the batched
-        routing operator (`experiments.batched.routing_operator`) consume it,
-        so the two paths cannot drift apart.  len(route_links(a, b)) equals
+        This is the single source of truth for link loads: the serial
+        simulator (`core.simulator._per_link_peak_load`), the batched routing
+        operator (`experiments.batched.routing_operator`) and the windowed
+        contention simulator (`repro.nocsim.routes`) all consume it, so the
+        paths cannot drift apart.  len(route_links(a, b)) equals
         distance_matrix()[a, b] for every topology that implements it.
         """
+        return self.route_links_ordered(c0, c1, None)
+
+    def route_links_ordered(
+        self, c0: tuple[int, ...], c1: tuple[int, ...], order: tuple[int, ...] | None
+    ) -> list[tuple[int, ...]] | None:
+        """`route_links` with an explicit dimension traversal order (`None` =
+        the topology's natural order, e.g. X-then-Y).  Minimal-adaptive
+        routing arms (`repro.nocsim`) choose per flow between the natural and
+        the reversed order; every order yields a minimal route, so
+        len(route_links_ordered(a, b, o)) == distance_matrix()[a, b] for any
+        permutation `o`.  Returns None when no exact routing model exists."""
         return None
 
     def distance(self, i: int, j: int) -> int:
@@ -65,20 +85,6 @@ class Topology(abc.ABC):
         return float(d.sum() / (n * (n - 1)))
 
 
-def _mesh_xy_links(c0: tuple[int, ...], c1: tuple[int, ...]) -> list[tuple[int, int, int, int]]:
-    """X-Y dimension-ordered wormhole route on a (non-wrapping) 2-D mesh:
-    |Δx| X-links at y0, then |Δy| Y-links at x1."""
-    (x0, y0), (x1, y1) = c0, c1
-    links = []
-    xstep = 1 if x1 > x0 else -1
-    for x in range(x0, x1, xstep):
-        links.append((x, y0, x + xstep, y0))
-    ystep = 1 if y1 > y0 else -1
-    for y in range(y0, y1, ystep):
-        links.append((x1, y, x1, y + ystep))
-    return links
-
-
 def _ring_route(a: int, b: int, k: int) -> tuple[int, int]:
     """(step, hops) along a k-ring taking the shorter way; ties (diff == k/2)
     break toward the increasing direction so routing stays deterministic."""
@@ -87,26 +93,36 @@ def _ring_route(a: int, b: int, k: int) -> tuple[int, int]:
     return (1, fwd) if fwd <= bwd else (-1, bwd)
 
 
-def _torus_xy_links(
-    c0: tuple[int, ...], c1: tuple[int, ...], kx: int, ky: int
-) -> list[tuple[int, int, int, int]]:
-    """Wraparound X-Y route on a 2-D torus: the shorter ring direction in X,
-    then in Y.  Hop count per dimension is min(Δ, k − Δ) — exactly the
-    `Torus2D.distance_matrix` metric, so link loads and byte-hops agree."""
-    (x0, y0), (x1, y1) = c0, c1
-    links = []
-    xstep, xhops = _ring_route(x0, x1, kx)
-    x = x0
-    for _ in range(xhops):
-        nx = (x + xstep) % kx
-        links.append((x, y0, nx, y0))
-        x = nx
-    ystep, yhops = _ring_route(y0, y1, ky)
-    y = y0
-    for _ in range(yhops):
-        ny = (y + ystep) % ky
-        links.append((x1, y, x1, ny))
-        y = ny
+def dimension_ordered_links(
+    c0: tuple[int, ...],
+    c1: tuple[int, ...],
+    dims: tuple[int, ...],
+    *,
+    wrap: bool,
+    order: tuple[int, ...] | None = None,
+) -> list[tuple[int, ...]]:
+    """Deterministic dimension-ordered route on a k-ary mesh (`wrap=False`)
+    or torus (`wrap=True`): traverse the dimensions in `order` (default
+    ascending, i.e. X-Y[-Z]), stepping one link at a time; on a torus each
+    dimension takes the shorter ring direction (ties toward increasing).
+    Links are (c_from + c_to) 2·ndim tuples.  Hop count per dimension is
+    |Δ| (mesh) or min(Δ, k − Δ) (torus) — exactly the corresponding
+    `distance_matrix` metric, so link loads and byte-hops agree for every
+    traversal order."""
+    order = tuple(range(len(dims))) if order is None else tuple(order)
+    pos = list(c0)
+    links: list[tuple[int, ...]] = []
+    for dim in order:
+        a, b, k = pos[dim], c1[dim], dims[dim]
+        if wrap:
+            step, hops = _ring_route(a, b, k)
+        else:
+            step, hops = (1 if b >= a else -1), abs(b - a)
+        for _ in range(hops):
+            nxt = list(pos)
+            nxt[dim] = (pos[dim] + step) % k if wrap else pos[dim] + step
+            links.append(tuple(pos) + tuple(nxt))
+            pos = nxt
     return links
 
 
@@ -147,8 +163,8 @@ class Mesh2D(Topology):
     def num_links(self) -> int:
         return 2 * ((self.kx - 1) * self.ky + self.kx * (self.ky - 1))
 
-    def route_links(self, c0, c1):
-        return _mesh_xy_links(c0, c1)
+    def route_links_ordered(self, c0, c1, order):
+        return dimension_ordered_links(c0, c1, (self.kx, self.ky), wrap=False, order=order)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,14 +202,18 @@ class FlattenedButterfly(Topology):
         col_links = self.ky * (self.kx * (self.kx - 1))
         return row_links + col_links
 
-    def route_links(self, c0, c1):
-        # Direct link per differing dimension: X first, then Y at x1.
-        (x0, y0), (x1, y1) = c0, c1
+    def route_links_ordered(self, c0, c1, order):
+        # Direct link per differing dimension, traversed in `order` (natural:
+        # X first, then Y at x1) — row/column cliques make each hop one link.
+        order = (0, 1) if order is None else tuple(order)
+        pos = list(c0)
         links = []
-        if x0 != x1:
-            links.append((x0, y0, x1, y0))
-        if y0 != y1:
-            links.append((x1, y0, x1, y1))
+        for dim in order:
+            if pos[dim] != c1[dim]:
+                nxt = list(pos)
+                nxt[dim] = c1[dim]
+                links.append(tuple(pos) + tuple(nxt))
+                pos = nxt
         return links
 
 
@@ -223,8 +243,8 @@ class Torus2D(Topology):
     def num_links(self) -> int:
         return 2 * 2 * self.num_nodes  # 2 dims × 2 directions × nodes
 
-    def route_links(self, c0, c1):
-        return _torus_xy_links(c0, c1, self.kx, self.ky)
+    def route_links_ordered(self, c0, c1, order):
+        return dimension_ordered_links(c0, c1, (self.kx, self.ky), wrap=True, order=order)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +276,15 @@ class Torus3D(Topology):
 
     def num_links(self) -> int:
         return 3 * 2 * self.num_nodes
+
+    def route_links_ordered(self, c0, c1, order):
+        # Wrap-aware X-Y-Z dimension-ordered routing on the pod fabric: the
+        # shorter ring direction per dimension, matching distance_matrix — so
+        # the simulator and the batched routing operator get exact per-link
+        # loads on TPU-ICI instead of the uniform-spread fallback.
+        return dimension_ordered_links(
+            c0, c1, (self.kx, self.ky, self.kz), wrap=True, order=order
+        )
 
 
 def topology_by_name(name: str, *dims: int) -> Topology:

@@ -15,6 +15,11 @@ Constants besides Table 3 come from the paper's cited modelling tools
 (NVSim-CAM / Destiny / ORION / CACTI) at the granularity the paper reports;
 they cancel in the speedup/energy *ratios* the paper plots (Figs. 7/8), which
 are driven by the hop-count distribution — the quantity our placement changes.
+
+The analytic network term is contention-blind (one aggregate peak-link
+serialization bound); `simulate(contention=NocSimParams(...))` swaps in the
+windowed contention simulator (`repro.nocsim`) for hotspot-formation,
+queueing and routing-policy effects — see EXPERIMENTS.md §Contention.
 """
 from __future__ import annotations
 
@@ -71,6 +76,11 @@ class SimResult:
     t_serialization_s: float
     e_network_j: float
     e_compute_j: float
+    # Set only when `simulate(contention=...)` ran the windowed NoC
+    # simulator (repro.nocsim): the contended replacement of t_network_s
+    # (t_network_s itself keeps the analytic value for comparability;
+    # exec_time_s/energy then use the contended term).
+    t_network_contended_s: float | None = None
 
     def speedup_over(self, other: "SimResult") -> float:
         return other.exec_time_s / self.exec_time_s
@@ -86,9 +96,10 @@ def _per_link_peak_load(
 
     Per-link byte loads come from `Topology.route_links` — X-Y dimension-
     ordered stepping on the mesh, direct per-dimension links on the flattened
-    butterfly, wraparound shortest-direction stepping on the 2-D torus — and
-    fall back to a uniform-spread approximation for topologies without an
-    exact routing model (e.g. Torus3D).
+    butterfly, wraparound shortest-direction stepping on the 2-D/3-D tori —
+    and fall back to a uniform-spread approximation for topologies without
+    an exact routing model (none of the built-in four, all of which now
+    implement `route_links_ordered`).
     """
     topo = placement.topology
     coords = topo.coords()
@@ -103,7 +114,7 @@ def _per_link_peak_load(
     byte_hops = float((w * flow_hops).sum())
     origin = tuple(coords[0]) if len(coords) else ()
     if topo.route_links(origin, origin) is not None:
-        link_load: dict[tuple[int, int, int, int], float] = {}
+        link_load: dict[tuple[int, ...], float] = {}
         for c0, c1, bytes_ in zip(ci, cj, w):
             for key in topo.route_links(tuple(c0), tuple(c1)):
                 link_load[key] = link_load.get(key, 0.0) + float(bytes_)
@@ -122,12 +133,21 @@ def simulate(
     params: SimParams = SimParams(),
     num_iterations: int = 1,
     active_edges_per_iter: float | None = None,
+    contention: object | None = None,
 ) -> SimResult:
     """Simulate one full execution whose aggregate traffic is `traffic`.
 
     `traffic` carries bytes already summed over iterations (edge_activity);
     num_iterations only affects the latency term (one network window and one
     compute window per iteration) and static energy integration.
+
+    `contention` — a `repro.nocsim.NocSimParams` — replaces the analytic
+    network term with the windowed contention simulator's: T_network becomes
+    max(t_sf, contended drain) + latency + mean queueing delay, recorded in
+    `t_network_contended_s` (t_network_s keeps the analytic value so the two
+    models stay comparable side by side).  In the uncongested limit the
+    contended term equals the analytic one (property-tested in
+    tests/test_nocsim.py).  Imported lazily: nocsim sits above core.
     """
     m = traffic.bytes_matrix
     total_bytes = float(m.sum())
@@ -155,7 +175,21 @@ def simulate(
     t_serial = peak_link / params.link_bandwidth_bytes_per_s
     t_latency = num_iterations * avg_hops * params.hop_latency_s  # head latency
     t_network = max(t_sf, t_serial) + t_latency
-    exec_time = t_compute + t_network
+    t_network_contended = None
+    if contention is not None:
+        from repro.nocsim import simulate_contended  # lazy: nocsim sits above core
+
+        noc = simulate_contended(
+            traffic,
+            placement,
+            noc_params=contention,
+            params=params,
+            num_iterations=num_iterations,
+        )
+        t_network_contended = noc.t_network_contended_s
+    exec_time = t_compute + (
+        t_network if t_network_contended is None else t_network_contended
+    )
 
     # --- energy ---
     e_network = (
@@ -176,6 +210,7 @@ def simulate(
         t_serialization_s=t_serial,
         e_network_j=e_network,
         e_compute_j=e_compute,
+        t_network_contended_s=t_network_contended,
     )
 
 

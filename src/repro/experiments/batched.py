@@ -44,8 +44,6 @@ __all__ = [
     "resolve_backend",
 ]
 
-_ROUTING_CACHE: dict[Topology, np.ndarray | None] = {}
-
 # "auto" switches to jax only past this stacked-tensor element count: below it
 # BLAS float64 einsums beat jit dispatch + f32 transfer (measured: a 48-config
 # paper grid is ~100k elements/group and numpy wins; jax pays off when the
@@ -70,7 +68,7 @@ def resolve_backend(backend: str = "auto", problem_size: int | None = None) -> s
 
 
 def routing_operator(topology: Topology):
-    """(num_links_used, N·N) sparse CSR operator mapping a router-space bytes
+    """(num_links, N·N) sparse CSR operator mapping a router-space bytes
     matrix to per-link loads, built from the same `Topology.route_links`
     model the serial simulator uses (X-Y mesh stepping, flattened-butterfly
     direct links, wraparound torus stepping) — so batched and serial link
@@ -78,42 +76,19 @@ def routing_operator(topology: Topology):
     `hops(s,t)` of the L links (~0.5 % of entries on an 8×8 mesh) — the
     dense matmul was the batch hot spot.
 
-    Returns None for topologies the serial path also approximates with the
-    uniform spread (no exact route_links, e.g. Torus3D); rows cover only
-    links that some route uses — unused links carry zero load and cannot be
-    the peak.
+    The operator itself is the natural-order half of the pair
+    `repro.nocsim.routes.route_operators` builds (one builder, one cache —
+    the windowed contention simulator shares it); links only the reversed
+    order uses carry zero load under this operator and cannot be the peak.
+    Returns None for topologies with no exact route_links — none of the
+    built-in four since Torus3D gained wrap-aware dimension-ordered routing
+    — which the batched path approximates with the uniform spread, like the
+    serial one.
     """
-    cached = _ROUTING_CACHE.get(topology, "miss")
-    if not isinstance(cached, str):
-        return cached
-    coords = topology.coords()
-    origin = tuple(coords[0]) if len(coords) else ()
-    if topology.route_links(origin, origin) is None:
-        _ROUTING_CACHE[topology] = None
-        return None
-    n = topology.num_nodes
-    link_ids: dict[tuple[int, int, int, int], int] = {}
-    rows: list[int] = []
-    cols: list[int] = []
+    from repro.nocsim.routes import route_operators
 
-    for i, c0 in enumerate(coords):
-        for j, c1 in enumerate(coords):
-            if i == j:
-                continue
-            pair = i * n + j
-            for key in topology.route_links(tuple(c0), tuple(c1)):
-                lid = link_ids.get(key)
-                if lid is None:
-                    lid = link_ids[key] = len(link_ids)
-                rows.append(lid)
-                cols.append(pair)
-    from scipy import sparse
-
-    op = sparse.csr_matrix(
-        (np.ones(len(rows)), (rows, cols)), shape=(len(link_ids), n * n), dtype=np.float64
-    )
-    _ROUTING_CACHE[topology] = op
-    return op
+    ops = route_operators(topology)
+    return None if ops is None else ops.nat
 
 
 def scatter_to_router_space(traffic: TrafficMatrix, placement: Placement) -> np.ndarray:
@@ -188,7 +163,8 @@ def _contract_numpy(stack: np.ndarray, dist: np.ndarray, routing):
 
 _JAX_KERNELS: dict[bool, object] = {}
 # Dense copies of the (cached-forever) sparse routing operators for the jax
-# matmul path, keyed by object id — safe because _ROUTING_CACHE pins them.
+# matmul path, keyed by object id — safe because nocsim.routes._OP_CACHE
+# pins them (routing_operator returns the cached pair's natural half).
 _JAX_DENSE_ROUTING: dict[int, object] = {}
 
 

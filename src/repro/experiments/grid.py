@@ -63,6 +63,10 @@ class GridSpec:
     scale: float = PAPER_SCALE
     pair_schemes: bool = True
     seed: int = 0
+    # True → run_sweep follows the batched evaluation with the windowed
+    # contention pass (repro.nocsim): every config × routing arm through the
+    # stacked queue simulator, numpy↔jax parity recorded in the payload.
+    contention: bool = False
 
     def schemes(self) -> tuple[tuple[str, str], ...]:
         if self.pair_schemes:
@@ -165,6 +169,21 @@ GRIDS: dict[str, GridSpec] = {
     #     and to quad+2opt on mesh2d; §Torus compares its torus2d H against
     #     powerlaw+greedy's to show construction beats search for free.
     #   random+random   — the paper baseline.
+    # Windowed NoC contention (repro.nocsim): proposed scheme vs baseline on
+    # mesh2d AND torus2d with the phase-resolved injection profile, both
+    # routing arms (dimension-ordered vs minimal-adaptive two-choice) —
+    # quantifies the hotspot-formation / queueing effects the analytic
+    # serialization term misses and how much of the paper's win survives
+    # smarter routing (EXPERIMENTS.md §Contention).
+    "contention": GridSpec(
+        name="contention",
+        workloads=("amazon", "soc-pokec"),
+        algorithms=("pagerank", "bfs"),
+        topologies=("mesh2d", "torus2d"),
+        parts=(16,),
+        contention=True,
+        **_PROPOSED_VS_BASELINE,
+    ),
     "torus": GridSpec(
         name="torus",
         workloads=("amazon", "soc-pokec"),

@@ -5,10 +5,12 @@
         --md /tmp/EXPERIMENTS.mini.md --json /tmp/BENCH_sweep.mini.json
 
 Writes `EXPERIMENTS.md` (human evidence record: §Calibration, §Dry-run,
-§Roofline, §Perf, Fig. 5/7/8, §Ablation, §Mesh-scaling, §Torus tables) and
-`BENCH_sweep.json` (machine-readable per-config records + comparisons) for
-`--grid paper`; secondary grids (`ablation`, `meshscale`, `torus`) store
-`artifacts/sweeps/<grid>.json`, which the next paper render folds in.
+§Roofline, §Perf, Fig. 5/7/8, §Ablation, §Mesh-scaling, §Torus, §Contention
+tables) and `BENCH_sweep.json` (machine-readable per-config records +
+comparisons) for `--grid paper`; secondary grids (`ablation`, `meshscale`,
+`torus`, `contention`) store `artifacts/sweeps/<grid>.json`, which the next
+paper render folds in (`contention` additionally runs the windowed NoC
+simulator over every config × routing arm — see `repro.nocsim`).
 Completes offline; traces are cached under `--cache-dir` so repeated sweeps
 skip re-tracing.  `python -m repro.experiments.report --check` audits the
 committed report against the committed payloads without running anything.

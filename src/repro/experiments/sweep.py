@@ -77,6 +77,10 @@ class SweepResult:
     timings: dict[str, float]
     backend: str
     placement_stats: dict = dataclasses.field(default_factory=dict)
+    # `--grid contention` payload (repro.nocsim.contention_sweep_payload):
+    # per config × routing-arm contended records + backend parity; None for
+    # grids without the contention pass.
+    contention: dict | None = None
 
     def to_dict(self) -> dict:
         return {
@@ -88,6 +92,7 @@ class SweepResult:
             "cache_stats": self.cache_stats,
             "timings": self.timings,
             "placement_stats": self.placement_stats,
+            "contention": self.contention,
         }
 
 
@@ -281,6 +286,24 @@ def run_sweep(
             )
         )
 
+    # ---- windowed contention pass (repro.nocsim, `--grid contention`) ------
+    contention = None
+    t_contention = None
+    if grid.contention and configs:
+        from repro.nocsim import contention_sweep_payload
+
+        t0 = time.perf_counter()
+        contention = contention_sweep_payload(
+            configs, traffics, placements, num_iterations=iters, params=params
+        )
+        t_contention = time.perf_counter() - t0
+        parity = contention.get("backend_parity_max_rel")
+        say(
+            f"[sweep:{grid.name}] contention: {len(contention['records'])} "
+            f"(config × routing) records, backends {contention['backends']}, "
+            f"numpy↔jax parity {parity if parity is None else f'{parity:.2e}'}"
+        )
+
     timings = {
         "graphs_s": t_graphs,
         "trace_s": t_trace,
@@ -289,6 +312,7 @@ def run_sweep(
         "placement_serial_s": t_placement_serial,
         "batched_eval_s": t_batched,
         "serial_eval_s": t_serial_loop,
+        "contention_s": t_contention,
         "total_s": time.perf_counter() - t_start,
     }
     return SweepResult(
@@ -299,6 +323,7 @@ def run_sweep(
         timings=timings,
         backend=backend,
         placement_stats=placement_stats,
+        contention=contention,
     )
 
 

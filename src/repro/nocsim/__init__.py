@@ -1,0 +1,34 @@
+"""Contention-aware windowed NoC simulation (paper §6 evaluation gap).
+
+The analytic simulator (`core.simulator`) charges the network one
+serialization term — peak aggregate link load over link bandwidth — which is
+blind to *when* bytes hit a link: time-multiplexed hotspots (the Process /
+Reduce phase structure of §4), queue build-up, and routing-policy effects
+are invisible.  This subsystem replays a `TrafficMatrix` as per-window flit
+injections over the exact `Topology.route_links` paths and advances
+per-link occupancy queues in discrete windows, producing a contended
+T_network, per-link utilization timelines, saturation throughput, and tail
+(p99) packet latency per config.
+
+Layering: `nocsim` sits between `core` and `experiments` — it imports only
+`core` (plus numpy/scipy), and `experiments.sweep` drives it for the
+`--grid contention` sweep.  `core.simulator.simulate` hooks into it lazily
+(the optional `contention=` argument) to avoid an import cycle.
+
+Modules: `routes` (dense route operators + the minimal-adaptive two-choice
+assignment), `model` (window semantics, phase decomposition, the serial
+numpy reference `simulate_contended`), `batch` (the stacked backend — one
+`jax.lax.scan` over windows simulating ALL sweep configs in one program,
+with a vectorized numpy reference stepper; same parity discipline as
+`experiments.placement_batch`).
+"""
+from repro.nocsim.model import NocSimParams, NocSimResult, simulate_contended
+from repro.nocsim.batch import contended_batch, contention_sweep_payload
+
+__all__ = [
+    "NocSimParams",
+    "NocSimResult",
+    "simulate_contended",
+    "contended_batch",
+    "contention_sweep_payload",
+]

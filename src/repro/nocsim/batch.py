@@ -1,0 +1,253 @@
+"""The windowed stepper, batched: numpy reference + one stacked jax program.
+
+The window recursion per link is three elementwise ops —
+
+    arrived  = backlog + injected
+    serviced = min(arrived, cap)
+    backlog  = arrived − serviced
+
+— so the whole sweep stacks into (W, C, L_max) tensors: configs are padded
+along the link axis to the largest link count in the batch (padded links
+inject nothing and can never carry the per-window max), capacities are
+normalised away per config (the recursion runs in units of one window's
+service), and the jax backend advances ALL configs through ALL windows with
+a single `jax.lax.scan` — no serial per-config Python loop, same parity
+discipline as `experiments.placement_batch`:
+
+  * numpy backend: float64, the reference semantics (windows loop in
+    Python, configs vectorized);
+  * jax backend: one jit-compiled f32 scan over the normalised recursion;
+    min/add/sub on O(windows)-magnitude values keep the relative error well
+    under the 1e-6 contract asserted per sweep (`contention_sweep_payload`
+    records the measured numpy↔jax max relative difference on the contended
+    T_network, and `repro.experiments.report --check` gates on it).
+
+Everything before the recursion (`build_schedule`) and after it
+(`assemble_result`) is shared float64 numpy, so backend disagreement is
+attributable to the window recursion alone.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.placement import Placement
+from repro.core.simulator import SimParams
+from repro.core.traffic import TrafficMatrix
+from repro.nocsim.model import (
+    ConfigSchedule,
+    NocSimParams,
+    NocSimResult,
+    assemble_result,
+    build_schedule,
+)
+from repro.nocsim.routes import ROUTING_POLICIES
+
+__all__ = ["contended_batch", "contention_sweep_payload", "PARITY_RTOL"]
+
+# The numpy↔jax agreement contract on contended T_network, asserted per
+# contention sweep and gated by `repro.experiments.report --check`.
+PARITY_RTOL = 1e-6
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}; options: auto|jax|numpy")
+    if backend != "auto":
+        return backend
+    try:
+        import jax  # noqa: F401
+    except ImportError:  # pragma: no cover - jax is baked into the container
+        return "numpy"
+    return "jax"
+
+
+def _step_numpy(inj: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Reference recursion: `inj` is (W, C, L) in units of one window's
+    service (cap ≡ 1); returns (serviced, backlog) timelines of the same
+    shape.  Windows advance in a Python loop; configs and links are
+    vectorized."""
+    w = inj.shape[0]
+    backlog = np.zeros(inj.shape[1:], dtype=np.float64)
+    serviced_tl = np.empty_like(inj)
+    backlog_tl = np.empty_like(inj)
+    for step in range(w):
+        arrived = backlog + inj[step]
+        serviced = np.minimum(arrived, 1.0)
+        backlog = arrived - serviced
+        serviced_tl[step] = serviced
+        backlog_tl[step] = backlog
+    return serviced_tl, backlog_tl
+
+
+_JAX_STEP = None
+
+
+def _jax_step_fn():
+    """Build (once) the jitted stacked stepper; jit re-specialises per
+    (W, C, L_max) batch shape automatically."""
+    global _JAX_STEP
+    if _JAX_STEP is not None:
+        return _JAX_STEP
+    import jax
+    import jax.numpy as jnp
+
+    def run(inj):  # (W, C, L) normalised injections, cap ≡ 1
+        def body(backlog, injected):
+            arrived = backlog + injected
+            serviced = jnp.minimum(arrived, 1.0)
+            backlog = arrived - serviced
+            return backlog, (serviced, backlog)
+
+        init = jnp.zeros(inj.shape[1:], dtype=inj.dtype)
+        _, (serviced_tl, backlog_tl) = jax.lax.scan(body, init, inj)
+        return serviced_tl, backlog_tl
+
+    _JAX_STEP = jax.jit(run)
+    return _JAX_STEP
+
+
+def _step_jax(inj: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    import jax.numpy as jnp
+
+    serviced, backlog = _jax_step_fn()(jnp.asarray(inj, dtype=jnp.float32))
+    return np.asarray(serviced, np.float64), np.asarray(backlog, np.float64)
+
+
+def contended_batch(
+    traffics: list[TrafficMatrix],
+    placements: list[Placement],
+    *,
+    noc_params: NocSimParams = NocSimParams(),
+    params: SimParams = SimParams(),
+    num_iterations: np.ndarray | list[int] | int = 1,
+    backend: str = "auto",
+    schedules: list[ConfigSchedule] | None = None,
+) -> list[NocSimResult]:
+    """Batched contended simulation: one `NocSimResult` per (traffic,
+    placement) pair, in input order.  All configs advance through one
+    stacked recursion regardless of topology (the link axis is padded to
+    the batch maximum).  `schedules` lets a caller running several backends
+    over the same configs (the parity measurement) build them once."""
+    if len(traffics) != len(placements):
+        raise ValueError("traffics and placements must pair up")
+    n_cfg = len(traffics)
+    if n_cfg == 0:
+        return []
+    iters = np.broadcast_to(np.asarray(num_iterations, dtype=np.int64), (n_cfg,))
+    backend = _resolve_backend(backend)
+    if schedules is None:
+        schedules = [
+            build_schedule(t, p, noc_params=noc_params, params=params)
+            for t, p in zip(traffics, placements)
+        ]
+    w = noc_params.windows
+    l_max = max(s.inj.shape[1] for s in schedules)
+    inj = np.zeros((w, n_cfg, l_max), dtype=np.float64)
+    for c, s in enumerate(schedules):
+        if s.cap_bytes > 0.0:
+            inj[:, c, : s.inj.shape[1]] = s.inj / s.cap_bytes
+    step = _step_jax if backend == "jax" else _step_numpy
+    serviced_tl, backlog_tl = step(inj)
+    results = []
+    for c, s in enumerate(schedules):
+        l = s.inj.shape[1]
+        cap = s.cap_bytes
+        results.append(
+            assemble_result(
+                s,
+                serviced_tl[:, c, :l] * cap,
+                backlog_tl[:, c, :l] * cap,
+                noc_params=noc_params,
+                params=params,
+                num_iterations=int(iters[c]),
+                backend=backend,
+            )
+        )
+    return results
+
+
+def contention_sweep_payload(
+    configs: list,
+    traffics: list[TrafficMatrix],
+    placements: list[Placement],
+    *,
+    num_iterations: np.ndarray | list[int] | int = 1,
+    params: SimParams = SimParams(),
+    noc_params: NocSimParams = NocSimParams(),
+    run_parity: bool = True,
+) -> dict:
+    """The `--grid contention` sweep pass: every config × every routing arm
+    through the windowed simulator, on BOTH backends when jax is available.
+
+    Reported numbers come from the float64 numpy reference; the jax run
+    exists to (a) measure the stacked-program wall time and (b) measure the
+    backend parity `backend_parity_max_rel` = max over (config, arm) of the
+    relative |numpy − jax| on the contended T_network — committed into the
+    sweep artifact and gated ≤ `PARITY_RTOL` by the report freshness audit.
+    `configs` are `SweepConfig`-like objects (need `.key` plus the axis
+    fields); records join back to sweep records on `key`."""
+    import dataclasses as _dc
+
+    n_cfg = len(traffics)
+    iters = np.broadcast_to(np.asarray(num_iterations, dtype=np.int64), (n_cfg,))
+    records: list[dict] = []
+    parity_max = 0.0
+    timings: dict[str, float] = {}
+    backends = ["numpy"]
+    have_jax = False
+    if run_parity:
+        try:
+            import jax  # noqa: F401
+
+            have_jax = True
+            backends.append("jax")
+        except ImportError:  # pragma: no cover
+            pass
+    for routing in ROUTING_POLICIES:
+        arm_params = _dc.replace(noc_params, routing=routing)
+        schedules = [
+            build_schedule(t, p, noc_params=arm_params, params=params)
+            for t, p in zip(traffics, placements)
+        ]
+        t0 = time.perf_counter()
+        ref = contended_batch(
+            traffics,
+            placements,
+            noc_params=arm_params,
+            params=params,
+            num_iterations=iters,
+            backend="numpy",
+            schedules=schedules,
+        )
+        timings[f"{routing}_numpy_s"] = time.perf_counter() - t0
+        if have_jax:
+            t0 = time.perf_counter()
+            acc = contended_batch(
+                traffics,
+                placements,
+                noc_params=arm_params,
+                params=params,
+                num_iterations=iters,
+                backend="jax",
+                schedules=schedules,
+            )
+            timings[f"{routing}_jax_s"] = time.perf_counter() - t0
+            for r_np, r_jx in zip(ref, acc):
+                denom = max(abs(r_np.t_network_contended_s), 1e-300)
+                parity_max = max(
+                    parity_max,
+                    abs(r_np.t_network_contended_s - r_jx.t_network_contended_s) / denom,
+                )
+        for cfg, res in zip(configs, ref):
+            rec = {"key": cfg.key, **_dc.asdict(cfg), **res.to_dict()}
+            records.append(rec)
+    return {
+        "noc_params": _dc.asdict(noc_params),
+        "records": records,
+        "backends": backends,
+        "backend_parity_max_rel": parity_max if have_jax else None,
+        "parity_rtol": PARITY_RTOL,
+        "timings": timings,
+    }

@@ -78,9 +78,15 @@ class TestTopologies:
         # equidistant both ways (Δ = k/2): deterministic forward tie-break
         assert t.route_links((0, 1), (0, 3)) == [(0, 1, 0, 2), (0, 2, 0, 3)]
 
-    def test_torus3d_has_no_exact_routing(self):
-        t = Torus3D(2, 2, 2)
-        assert t.route_links((0, 0, 0), (0, 0, 0)) is None
+    def test_torus3d_routes_exactly_with_wraparound(self):
+        # ROADMAP item closed: Torus3D routes dimension-ordered with wrap
+        # awareness instead of signalling the uniform-spread fallback.
+        t = Torus3D(4, 4, 2)
+        assert t.route_links((0, 0, 0), (0, 0, 0)) == []
+        assert t.route_links((0, 0, 0), (3, 0, 0)) == [(0, 0, 0, 3, 0, 0)]  # wrap
+        d = t.distance_matrix()
+        c = t.coords()
+        assert len(t.route_links(tuple(c[1]), tuple(c[25]))) == d[1, 25]
 
 
 class TestPlacementOptimality:

@@ -77,8 +77,28 @@ class TestBatchedEquivalence:
             assert b.energy_j == pytest.approx(s.energy_j, rel=1e-4)
             assert b.avg_hops == pytest.approx(s.avg_hops, rel=1e-4)
 
-    def test_non2d_topology_uses_serial_fallback(self):
+    def test_torus3d_routes_exactly_and_matches_serial(self):
+        # Torus3D now carries wrap-aware dimension-ordered routing, so the
+        # batched path builds an exact operator instead of falling back.
         topo = Torus3D(2, 2, 4)
+        assert routing_operator(topo) is not None
+        g = rmat(80, 500, seed=1)
+        p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)
+        t = traffic_from_partition(p, g.src, g.dst)
+        pl = random_placement(t.num_logical, topo, seed=0)
+        (b,) = simulate_batch([t], [pl], backend="numpy")
+        s = simulate(t, pl)
+        assert b.exec_time_s == pytest.approx(s.exec_time_s, rel=1e-12)
+        assert b.t_serialization_s == pytest.approx(s.t_serialization_s, rel=1e-12)
+
+    def test_routeless_topology_uses_serial_fallback(self):
+        # The uniform-spread fallback stays covered via a stub topology with
+        # no routing model (batched and serial must agree on it too).
+        class NoRoute(Torus3D):
+            def route_links_ordered(self, c0, c1, order):
+                return None
+
+        topo = NoRoute(2, 2, 4, name="noroute3d")
         assert routing_operator(topo) is None
         g = rmat(80, 500, seed=1)
         p = powerlaw_partition(g.src, g.dst, g.num_nodes, 4)

@@ -58,6 +58,17 @@ else
     echo "(the 0.4->0.5 shims were exercised by the full suite above)"
 fi
 
+echo "== scale memory budget (sparse pipeline @ soc-pokec scale 0.1) =="
+# The published-size pipeline guard: one scale-0.1 soc-pokec sweep (3.06M
+# edges) under a peak-RSS assertion (tests/test_scale_memory.py, 2 GiB
+# budget vs ~1 GiB measured).  Marked `slow` + env-gated so tier-1 above
+# stays fast; VERIFY_SKIP_SCALE_RSS=1 skips it on constrained containers.
+if [[ "${VERIFY_SKIP_SCALE_RSS:-0}" == "1" ]]; then
+    echo "skipped (VERIFY_SKIP_SCALE_RSS=1)"
+else
+    REPRO_SCALE_RSS=1 python -m pytest -q tests/test_scale_memory.py
+fi
+
 echo "== EXPERIMENTS.md freshness vs committed payloads =="
 python -m repro.experiments.report --check
 

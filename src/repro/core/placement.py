@@ -66,9 +66,13 @@ __all__ = [
     "symmetrize_weights",
     "swap_delta_matrix",
     "move_delta_matrix",
+    "sparse_weighted_hops",
+    "swap_candidates_topk",
+    "swap_delta_pairs",
     "default_max_steps",
     "two_opt",
     "two_opt_best_move",
+    "two_opt_topk",
     "ilp_placement",
     "brute_force_placement",
     "resolve_method",
@@ -446,6 +450,96 @@ def move_delta_matrix(w: np.ndarray, d: np.ndarray, site: np.ndarray) -> np.ndar
     return cost_all - cur[:, None]
 
 
+# ---------------------------------------------------------------------------
+# sparse-first kernels: H from COO triplets, top-k candidate swaps, and
+# blocked (memory-bounded) forms of the delta evaluation.  Parity contract
+# (see core.traffic's module docstring): traffic weights are integer-valued
+# bytes and hop distances are integers, so every re-association below —
+# gather-sums instead of dense sums, einsum pair-dots instead of gemm rows,
+# row-blocked gemms instead of one gemm — is bit-exact against the dense
+# kernels, not merely close (property-tested in tests/test_sparse_traffic.py).
+# ---------------------------------------------------------------------------
+
+
+def sparse_weighted_hops(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, d: np.ndarray, site: np.ndarray
+) -> float:
+    """H = Σ_nz vals·d(site_rows, site_cols) by gather — the O(nnz) form of
+    `Placement.weighted_hops` for COO traffic (`SparseTraffic` triplets),
+    never materializing the (n, n) weights or the (n, n) site-distance
+    gather."""
+    site = np.asarray(site, dtype=np.int64)
+    r = site[np.asarray(rows, dtype=np.int64)]
+    c = site[np.asarray(cols, dtype=np.int64)]
+    return float((np.asarray(vals, dtype=np.float64) * d[r, c]).sum())
+
+
+def swap_candidates_topk(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, num_logical: int, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Candidate swap pairs from the sparse traffic structure: the k shards
+    with the heaviest incident traffic (the power-law hubs of Eq. 1 — where
+    essentially all of the improvable H lives) paired with every shard.
+
+    Returns (pi, pj) with pi < pj, deduplicated, in lexicographic order —
+    the same scan order `np.argmin` uses over the upper triangle of the full
+    delta matrix, so a restricted search that covers all pairs (k ≥ n)
+    breaks ties identically to `two_opt_best_move`.  O(k·n) candidates
+    instead of the O(n²) dense delta matrix."""
+    incident = np.bincount(
+        np.asarray(rows, dtype=np.int64), weights=vals, minlength=num_logical
+    ) + np.bincount(np.asarray(cols, dtype=np.int64), weights=vals, minlength=num_logical)
+    k = max(1, min(int(k), num_logical))
+    hubs = np.argsort(-incident, kind="stable")[:k]
+    pi = np.repeat(hubs, num_logical)
+    pj = np.tile(np.arange(num_logical, dtype=np.int64), k)
+    lo, hi = np.minimum(pi, pj), np.maximum(pi, pj)
+    keep = lo != hi
+    flat = np.unique(lo[keep] * num_logical + hi[keep])
+    return flat // num_logical, flat % num_logical
+
+
+def swap_delta_pairs(
+    w: np.ndarray, d: np.ndarray, site: np.ndarray, pi: np.ndarray, pj: np.ndarray
+) -> np.ndarray:
+    """Exact ΔH of the given candidate swaps only — `swap_delta_matrix`'s
+    formula evaluated at O(|pairs|·n) work and O(|pairs| + n·S) memory
+    instead of the full (n, n) matrix (the top-k search path)."""
+    site = np.asarray(site, dtype=np.int64)
+    pi = np.asarray(pi, dtype=np.int64)
+    pj = np.asarray(pj, dtype=np.int64)
+    dsite = d[site]  # (n, S): d(site_k, t) for every router t
+    diag = _diag_cost(w, dsite, site)
+    out = np.empty(pi.size, dtype=np.float64)
+    # Pair blocks keep the (n, block) gathers bounded; each pair's delta is
+    # independent, so blocking cannot change any value.
+    for start in range(0, pi.size, _DIAG_BLOCK):
+        sl = slice(start, min(start + _DIAG_BLOCK, pi.size))
+        bi, bj = pi[sl], pj[sl]
+        a_ij = np.einsum("pk,kp->p", w[bi], dsite[:, site[bj]])
+        a_ji = np.einsum("pk,kp->p", w[bj], dsite[:, site[bi]])
+        dij = d[site[bi], site[bj]]
+        out[sl] = a_ij + a_ji + 2.0 * w[bi, bj] * dij - diag[bi] - diag[bj]
+    return out
+
+
+# Internal row-block size for the memory-bounded kernels below: transients
+# stay O(_DIAG_BLOCK · n) instead of the (n, n) site-distance gather.
+_DIAG_BLOCK = 256
+
+
+def _diag_cost(w: np.ndarray, dsite: np.ndarray, site: np.ndarray) -> np.ndarray:
+    """diag[i] = A[i, i] = Σ_k w[i, k]·d(site_k, site_i), computed in row
+    blocks (each row's dot is independent, so the block size cannot change
+    the result)."""
+    n = site.size
+    diag = np.empty(n, dtype=np.float64)
+    for start in range(0, n, _DIAG_BLOCK):
+        sl = slice(start, min(start + _DIAG_BLOCK, n))
+        diag[sl] = np.einsum("bk,kb->b", w[sl], dsite[:, site[sl]])
+    return diag
+
+
 def two_opt(
     placement: Placement,
     weights: np.ndarray,
@@ -512,19 +606,78 @@ def default_max_steps(n: int) -> int:
     return 4 * n + 16
 
 
+def _best_candidates_blocked(
+    w: np.ndarray,
+    d: np.ndarray,
+    site: np.ndarray,
+    occupied: np.ndarray,
+    block: int,
+    include_free_sites: bool,
+) -> tuple[int, int, float, int, int, float]:
+    """One step's (best swap, best move) streamed over row blocks: transients
+    are O(block·max(n, S)) instead of the (n, n) delta + gather matrices.
+
+    Scans row blocks in ascending order tracking the strictly-smallest value
+    — exactly `np.argmin`'s first-occurrence-in-row-major tie-break — so in
+    the integer-valued weight domain (where the blocked gemms are bit-exact,
+    see the sparse-kernel banner above) the selected candidate is identical
+    to the dense evaluation's."""
+    n = site.size
+    num_sites = d.shape[0]
+    dsite = d[site]  # (n, S)
+    diag = _diag_cost(w, dsite, site)
+    best_swap, swap_val = -1, np.inf
+    for start in range(0, n, block):
+        sl = slice(start, min(start + block, n))
+        b = sl.stop - sl.start
+        a_rows = (w[sl] @ dsite)[:, site]  # A[i∈blk, j]
+        a_cols = (w @ dsite[:, site[sl]]).T  # A[j, i∈blk] transposed to (b, n)
+        dss_rows = dsite[sl][:, site]  # d(site_i, site_j) for i∈blk
+        ds_b = a_rows + a_cols + 2.0 * w[sl] * dss_rows - diag[sl][:, None] - diag[None, :]
+        ds_b[np.arange(b), np.arange(sl.start, sl.stop)] = np.inf
+        k = int(ds_b.argmin())
+        v = ds_b.reshape(-1)[k]
+        if v < swap_val:
+            swap_val = v
+            ri, cj = divmod(k, n)
+            best_swap = (sl.start + ri) * n + cj
+    i_m = t_m = -1
+    move_val = np.inf
+    if include_free_sites and not occupied.all():
+        for start in range(0, n, block):
+            sl = slice(start, min(start + block, n))
+            dm_b = w[sl] @ dsite - diag[sl][:, None]  # (b, S); d symmetric ⇒
+            #                                           d[:, site].T == d[site]
+            dm_b[:, occupied] = np.inf
+            k = int(dm_b.argmin())
+            v = dm_b.reshape(-1)[k]
+            if v < move_val:
+                move_val = v
+                ri, t = divmod(k, num_sites)
+                i_m, t_m = sl.start + ri, t
+    i_s, j_s = divmod(best_swap, n) if best_swap >= 0 else (-1, -1)
+    return i_s, j_s, swap_val, i_m, t_m, move_val
+
+
 def two_opt_best_move(
     placement: Placement,
     weights: np.ndarray,
     *,
     max_steps: int | None = None,
     include_free_sites: bool = True,
+    swap_block: int | None = None,
 ) -> Placement:
     """Steepest-descent two_opt: per step evaluate ALL O(n²) swaps and
     O(n·S) free-site moves via the delta matrices and apply the single best,
     until no candidate improves H (a full 2-opt local optimum) or the step
     budget runs out.  Deterministic (no RNG).  This is the serial reference
     for the batched engine (`repro.experiments.placement_batch`), which runs
-    the identical recursion stacked over configs."""
+    the identical recursion stacked over configs.
+
+    `swap_block` streams the per-step evaluation over row blocks of that
+    size (O(block·max(n, S)) transients instead of the O(n²) delta matrix);
+    with integer-valued weights the descent path — every chosen move — is
+    bit-identical to the dense evaluation (tests/test_sparse_traffic.py)."""
     w = symmetrize_weights(weights)
     d = placement.topology.distance_matrix().astype(np.float64)
     site = placement.site.copy()
@@ -535,11 +688,76 @@ def two_opt_best_move(
     if max_steps is None:
         max_steps = default_max_steps(n)
     for _ in range(max_steps):
-        ds = swap_delta_matrix(w, d, site)
-        np.fill_diagonal(ds, np.inf)
-        best_swap = int(ds.argmin())
-        i_s, j_s = divmod(best_swap, n)
-        best = ds[i_s, j_s]
+        if swap_block is not None:
+            i_s, j_s, best, i_m, t_m, move_val = _best_candidates_blocked(
+                w, d, site, occupied, max(1, int(swap_block)), include_free_sites
+            )
+            if move_val < best:
+                best = move_val
+            else:
+                i_m = -1
+        else:
+            ds = swap_delta_matrix(w, d, site)
+            np.fill_diagonal(ds, np.inf)
+            best_swap = int(ds.argmin())
+            i_s, j_s = divmod(best_swap, n)
+            best = ds[i_s, j_s]
+            i_m = t_m = -1
+            if include_free_sites and not occupied.all():
+                dm = move_delta_matrix(w, d, site)
+                dm[:, occupied] = np.inf
+                best_move = int(dm.argmin())
+                i_m, t_m = divmod(best_move, num_sites)
+                if dm[i_m, t_m] < best:
+                    best = dm[i_m, t_m]
+                else:
+                    i_m = -1
+        if best >= BEST_MOVE_TOL:
+            break
+        if i_m >= 0:
+            occupied[site[i_m]] = False
+            occupied[t_m] = True
+            site[i_m] = t_m
+        else:
+            site[i_s], site[j_s] = site[j_s], site[i_s]
+    return Placement(placement.topology, site, placement.method + "+2opt")
+
+
+def two_opt_topk(
+    placement: Placement,
+    weights: np.ndarray,
+    *,
+    k: int | None = None,
+    max_steps: int | None = None,
+    include_free_sites: bool = True,
+) -> Placement:
+    """Steepest descent restricted to the top-k candidate swaps from the
+    sparse traffic structure (`swap_candidates_topk`: the k heaviest-incident
+    hub shards × every shard) plus the free-site moves — O(k·n) exact pair
+    deltas per step (`swap_delta_pairs`) instead of the O(n²) matrix.
+
+    With k ≥ n the candidate set is every pair and the search replays
+    `two_opt_best_move` exactly (same lexicographic tie-break; asserted in
+    tests/test_sparse_traffic.py); with k ≪ n it converges to a local
+    optimum of the restricted hub neighbourhood, where the power-law skew of
+    Eq. 1 concentrates the improvable H."""
+    w = symmetrize_weights(weights)
+    d = placement.topology.distance_matrix().astype(np.float64)
+    site = placement.site.copy()
+    n = site.size
+    num_sites = placement.topology.num_nodes
+    occupied = np.zeros(num_sites, dtype=bool)
+    occupied[site] = True
+    if max_steps is None:
+        max_steps = default_max_steps(n)
+    if k is None:
+        k = max(8, int(math.isqrt(n)))
+    rows, cols = np.nonzero(w)
+    pi, pj = swap_candidates_topk(rows, cols, w[rows, cols], n, k)
+    for _ in range(max_steps):
+        deltas = swap_delta_pairs(w, d, site, pi, pj)
+        p_best = int(deltas.argmin()) if deltas.size else -1
+        best = deltas[p_best] if p_best >= 0 else np.inf
         i_m = t_m = -1
         if include_free_sites and not occupied.all():
             dm = move_delta_matrix(w, d, site)
@@ -557,8 +775,8 @@ def two_opt_best_move(
             occupied[t_m] = True
             site[i_m] = t_m
         else:
-            site[i_s], site[j_s] = site[j_s], site[i_s]
-    return Placement(placement.topology, site, placement.method + "+2opt")
+            site[pi[p_best]], site[pj[p_best]] = site[pj[p_best]], site[pi[p_best]]
+    return Placement(placement.topology, site, placement.method + "+2opt[topk]")
 
 
 def ilp_placement(

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.noc import Topology
 from repro.core.placement import Placement
 from repro.core.simulator import SimParams, SimResult
-from repro.core.traffic import TrafficMatrix
+from repro.core.traffic import SparseTraffic, TrafficMatrix
 
 __all__ = [
     "routing_operator",
@@ -91,12 +91,19 @@ def routing_operator(topology: Topology):
     return None if ops is None else ops.nat
 
 
-def scatter_to_router_space(traffic: TrafficMatrix, placement: Placement) -> np.ndarray:
-    """(N, N) bytes between *routers* under `placement` (N = topology nodes)."""
+def scatter_to_router_space(
+    traffic: TrafficMatrix | SparseTraffic, placement: Placement
+) -> np.ndarray:
+    """(N, N) bytes between *routers* under `placement` (N = topology nodes).
+    Accepts the COO form directly (scatters only the nonzeros — the pairs are
+    unique by construction, so the result equals the dense scatter)."""
     n = placement.topology.num_nodes
     out = np.zeros((n, n), dtype=np.float64)
     s = placement.site
-    out[np.ix_(s, s)] = traffic.bytes_matrix
+    if isinstance(traffic, SparseTraffic):
+        out[s[traffic.rows], s[traffic.cols]] = traffic.vals
+    else:
+        out[np.ix_(s, s)] = traffic.bytes_matrix
     return out
 
 
@@ -161,6 +168,38 @@ def _contract_numpy(stack: np.ndarray, dist: np.ndarray, routing):
     return total_bytes, byte_hops, peak
 
 
+def _contract_numpy_blocked(stack: np.ndarray, dist: np.ndarray, routing, block: int):
+    """`_contract_numpy` streamed over column blocks of the flattened (s, t)
+    pair axis: total-bytes, byte-hops and link-load accumulation each touch
+    O(C·block) (plus one (L, C) loads accumulator) per step instead of the
+    full C·N² flat stack at once.  Traffic bytes are integer-valued and the
+    routing operator is 0/1, so the per-block partial sums re-associate
+    bit-exactly (see core.traffic's module docstring); `peak` is a max and
+    unaffected by chunking."""
+    c = stack.shape[0]
+    flat = stack.reshape(c, -1)
+    m = flat.shape[1]
+    dflat = dist.reshape(-1)
+    total_bytes = np.zeros(c, dtype=np.float64)
+    byte_hops = np.zeros(c, dtype=np.float64)
+    loads = (
+        np.zeros((routing.shape[0], c), dtype=np.float64) if routing is not None else None
+    )
+    for start in range(0, m, block):
+        sl = slice(start, min(start + block, m))
+        total_bytes += flat[:, sl].sum(axis=1)
+        byte_hops += flat[:, sl] @ dflat[sl]
+        if routing is not None:
+            loads += routing[:, sl] @ flat[:, sl].T
+    if routing is None:
+        peak = None
+    elif loads.shape[0]:
+        peak = loads.max(axis=0)
+    else:
+        peak = np.zeros(c)
+    return total_bytes, byte_hops, peak
+
+
 _JAX_KERNELS: dict[bool, object] = {}
 # Dense copies of the (cached-forever) sparse routing operators for the jax
 # matmul path, keyed by object id — safe because nocsim.routes._OP_CACHE
@@ -206,12 +245,13 @@ def _contract_jax(stack: np.ndarray, dist: np.ndarray, routing):
 
 
 def simulate_batch(
-    traffics: list[TrafficMatrix],
+    traffics: list[TrafficMatrix | SparseTraffic],
     placements: list[Placement],
     *,
     params: SimParams = SimParams(),
     num_iterations: np.ndarray | list[int] | int = 1,
     backend: str = "auto",
+    pair_block: int | None = None,
 ) -> list[SimResult]:
     """Batched `simulate()`: one SimResult per (traffic, placement) pair.
 
@@ -220,13 +260,22 @@ def simulate_batch(
     with the three stacked contractions described in the module docstring.
     Results are returned in input order and match the serial simulator to fp
     tolerance (float64-exact on the numpy backend).
+
+    Traffics may be `SparseTraffic` (scattered from the COO directly).
+    `pair_block` streams the contractions over column blocks of that many
+    (s, t) router pairs (`_contract_numpy_blocked`) — bit-identical on the
+    integer-byte domain and numpy-only, so setting it forces the numpy
+    backend.
     """
     if len(traffics) != len(placements):
         raise ValueError("traffics and placements must pair up")
     n = len(traffics)
     iters = np.broadcast_to(np.asarray(num_iterations, dtype=np.int64), (n,))
     problem_size = sum(p.topology.num_nodes ** 2 for p in placements)
-    backend = resolve_backend(backend, problem_size)
+    if pair_block is not None:
+        backend = "numpy"
+    else:
+        backend = resolve_backend(backend, problem_size)
     contract = _contract_jax if backend == "jax" else _contract_numpy
 
     groups: dict[tuple, list[int]] = {}
@@ -240,7 +289,12 @@ def simulate_batch(
         )
         dist = topology.distance_matrix().astype(np.float64)
         routing = routing_operator(topology)
-        total_bytes, byte_hops, peak = contract(stack, dist, routing)
+        if pair_block is not None:
+            total_bytes, byte_hops, peak = _contract_numpy_blocked(
+                stack, dist, routing, max(1, int(pair_block))
+            )
+        else:
+            total_bytes, byte_hops, peak = contract(stack, dist, routing)
         if peak is None:  # serial fallback: uniform spread over all links
             nlinks = max(1, topology.num_links())
             peak = byte_hops / nlinks

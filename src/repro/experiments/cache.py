@@ -13,6 +13,18 @@ Two levels:
 
 Entries are .npz files under `root/` named by the hex digest; `stats` counts
 hits/misses so tests (and the §Perf table) can show cache effectiveness.
+
+Sharded traffic (`traffic(..., edge_block=...)`): instead of one whole-matrix
+file, the per-edge-block COO contributions (`core.traffic.edge_block_coo`)
+and the vertex contribution are persisted as individual shard files
+`<key>.shard<k>.npz`, each carrying a sha256 of its own payload bytes.
+Shards are streamed from disk one at a time and merged through the same
+integer-exact COO accumulator the in-memory streaming path uses, so the
+result is bit-identical to `traffic_from_partition(edge_block=...)`.  A
+missing, truncated, or hash-mismatched shard invalidates only itself: that
+one block is recomputed and rewritten (atomically, via temp-file + rename)
+while every other shard still hits.  `edge_block=None` keeps the historical
+single-file path byte-for-byte.
 """
 from __future__ import annotations
 
@@ -25,7 +37,14 @@ import weakref
 import numpy as np
 
 from repro.core.partition import Partition, partition_by_name
-from repro.core.traffic import TrafficMatrix, traffic_from_partition
+from repro.core.traffic import (
+    DENSE_MATERIALIZE_MAX,
+    SparseTraffic,
+    TrafficMatrix,
+    edge_block_coo,
+    traffic_from_partition,
+    vertex_block_coo,
+)
 from repro.graph.structs import HostGraph
 from repro.graph.vertex_program import TraceResult
 
@@ -54,9 +73,39 @@ class CacheStats:
     trace_misses: int = 0
     traffic_hits: int = 0
     traffic_misses: int = 0
+    shard_hits: int = 0  # sharded-traffic blocks served from disk
+    shard_misses: int = 0  # blocks recomputed (absent, truncated, or bad hash)
 
     def as_dict(self) -> dict[str, int]:
         return dataclasses.asdict(self)
+
+
+def _shard_sha(keys: np.ndarray, vals: np.ndarray, total: float) -> str:
+    """Content hash of one shard's payload (what `_load_shard` verifies)."""
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(keys, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(vals, dtype=np.float64).tobytes())
+    h.update(np.float64(total).tobytes())
+    return h.hexdigest()
+
+
+def _load_shard(path: str) -> tuple[np.ndarray, np.ndarray, float] | None:
+    """Read one shard file; `None` means "recompute this block": the file is
+    missing, unreadable (truncated/corrupt zip), structurally wrong, or its
+    stored content hash does not match the payload."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with np.load(path) as z:
+            keys = np.asarray(z["keys"], dtype=np.int64)
+            vals = np.asarray(z["vals"], dtype=np.float64)
+            total = float(z["total"])
+            stored = str(z["sha"])
+    except Exception:  # BadZipFile, KeyError, OSError, pickle refusal, ...
+        return None
+    if stored != _shard_sha(keys, vals, total):
+        return None
+    return keys, vals, total
 
 
 class SweepCache:
@@ -149,30 +198,43 @@ class SweepCache:
         *,
         model: str = "paper",
         packet_bytes: int = 8,
-    ) -> TrafficMatrix:
-        """Load or compute the shard-to-shard traffic matrix for one config."""
-        key = _key(
-            "traffic",
-            {
-                "graph": self._digest_of(g),
-                "partition": hashlib.sha256(
-                    partition.vertex_part.tobytes() + partition.edge_part.tobytes()
-                ).hexdigest(),
-                "parts": partition.num_parts,
-                "activity": hashlib.sha256(trace.edge_activity.tobytes()).hexdigest(),
-                "model": model,
-                "packet_bytes": packet_bytes,
-            },
-        )
+        layout: str = "dense",
+        edge_block: int | None = None,
+    ) -> TrafficMatrix | SparseTraffic:
+        """Load or compute the shard-to-shard traffic matrix for one config.
+
+        `edge_block=None` (default) keeps the historical single whole-matrix
+        .npz per key.  Setting it switches to per-block shard files streamed
+        from disk (module docstring) — bit-identical result, O(block)+O(nnz)
+        resident instead of the file-sized whole.  `layout` follows
+        `traffic_from_partition`: "dense", "sparse", or "auto"."""
+        if layout not in ("dense", "sparse", "auto"):
+            raise ValueError(f"unknown layout {layout!r}; options: dense|sparse|auto")
+        meta = {
+            "graph": self._digest_of(g),
+            "partition": hashlib.sha256(
+                partition.vertex_part.tobytes() + partition.edge_part.tobytes()
+            ).hexdigest(),
+            "parts": partition.num_parts,
+            "activity": hashlib.sha256(trace.edge_activity.tobytes()).hexdigest(),
+            "model": model,
+            "packet_bytes": packet_bytes,
+        }
+        if edge_block is not None:
+            return self._traffic_sharded(
+                g, partition, trace, meta, model, packet_bytes, layout, int(edge_block)
+            )
+        key = _key("traffic", meta)
         path = self._path(key)
         if path is not None and os.path.exists(path):
             with np.load(path) as z:
                 self.stats.traffic_hits += 1
-                return TrafficMatrix(
+                t = TrafficMatrix(
                     num_parts=int(z["num_parts"]),
                     bytes_matrix=z["bytes_matrix"],
                     phase_bytes={k: float(z[f"phase_{k}"]) for k in ("process", "reduce", "apply")},
                 )
+                return self._as_layout(t, layout)
         self.stats.traffic_misses += 1
         t = traffic_from_partition(
             partition,
@@ -190,7 +252,117 @@ class SweepCache:
                 bytes_matrix=t.bytes_matrix,
                 **{f"phase_{k}": np.float64(v) for k, v in t.phase_bytes.items()},
             )
+        return self._as_layout(t, layout)
+
+    @staticmethod
+    def _as_layout(t: TrafficMatrix, layout: str) -> TrafficMatrix | SparseTraffic:
+        if layout == "sparse" or (
+            layout == "auto" and t.num_logical > DENSE_MATERIALIZE_MAX
+        ):
+            return t.to_sparse()
         return t
+
+    def _traffic_sharded(
+        self,
+        g: HostGraph,
+        partition: Partition,
+        trace: TraceResult,
+        meta: dict,
+        model: str,
+        packet_bytes: int,
+        layout: str,
+        edge_block: int,
+    ) -> TrafficMatrix | SparseTraffic:
+        """Streamed shard path: ceil(E/edge_block) edge shards plus one vertex
+        shard, each independently verified (content hash), recomputed on any
+        failure, and merged through the integer-exact COO accumulator —
+        bit-identical to `traffic_from_partition(edge_block=edge_block)`."""
+        from repro.core.traffic import _COOAccumulator
+
+        step = max(edge_block, 1)
+        meta = {**meta, "edge_block": step}
+        key = _key("traffic-shards", meta)
+        e_total = int(np.asarray(g.src).size)
+        v_total = int(partition.num_nodes)
+        n = 4 * partition.num_parts
+
+        def shard_path(k: int) -> str | None:
+            return (
+                None
+                if self.root is None
+                else os.path.join(self.root, f"{key}.shard{k:05d}.npz")
+            )
+
+        def resolve(k: int, compute) -> tuple[np.ndarray, np.ndarray, float]:
+            path = shard_path(k)
+            if path is not None:
+                cached = _load_shard(path)
+                if cached is not None:
+                    self.stats.shard_hits += 1
+                    return cached
+            self.stats.shard_misses += 1
+            keys, vals, total = compute()
+            if path is not None:
+                # Temp name keeps the .npz suffix (savez would append one).
+                tmp = path + ".tmp.npz"
+                np.savez_compressed(
+                    tmp,
+                    keys=keys,
+                    vals=vals,
+                    total=np.float64(total),
+                    sha=np.str_(_shard_sha(keys, vals, total)),
+                )
+                os.replace(tmp, path)  # atomic: no reader sees a partial file
+            return keys, vals, total
+
+        acc = _COOAccumulator()
+        w_sum = 0.0
+        n_edge_shards = (e_total + step - 1) // step
+        for k in range(n_edge_shards):
+            lo, hi = k * step, min((k + 1) * step, e_total)
+            keys_b, vals_b, total_b = resolve(
+                k,
+                lambda lo=lo, hi=hi: edge_block_coo(
+                    partition,
+                    g.src,
+                    g.dst,
+                    edge_activity=trace.edge_activity,
+                    packet_bytes=packet_bytes,
+                    model=model,
+                    lo=lo,
+                    hi=hi,
+                ),
+            )
+            acc.add(keys_b, vals_b)
+            w_sum += total_b
+        keys_v, vals_v, wv_sum = resolve(
+            n_edge_shards,
+            lambda: vertex_block_coo(
+                partition,
+                vertex_activity=trace.vertex_activity,
+                packet_bytes=packet_bytes,
+                lo=0,
+                hi=v_total,
+            ),
+        )
+        acc.add(keys_v, vals_v)
+
+        keep = acc.vals != 0.0
+        keys, vals = acc.keys[keep], acc.vals[keep]
+        sparse = SparseTraffic(
+            num_parts=partition.num_parts,
+            rows=keys // n,
+            cols=keys % n,
+            vals=vals,
+            phase_bytes={
+                "process": 2.0 * w_sum,
+                "reduce": 2.0 * w_sum,
+                "apply": float(wv_sum),
+            },
+        )
+        if layout == "sparse" or (layout == "auto" and n > DENSE_MATERIALIZE_MAX):
+            return sparse
+        return sparse.to_dense()
 
     # -------------------------------------------------------------- partition
     def partition(

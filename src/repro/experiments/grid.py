@@ -33,13 +33,18 @@ class SweepConfig:
     num_parts: int  # engines; NoC has 4·num_parts routers
     scale: float = PAPER_SCALE
     seed: int = 0
+    # True on configs expanded from a multi-scale grid (GridSpec.scales):
+    # the scale then disambiguates the key.  Single-scale grids keep the
+    # historical key format, so committed artifacts stay stable.
+    scale_in_key: bool = False
 
     @property
     def key(self) -> str:
-        return (
+        base = (
             f"{self.workload}/{self.algorithm}/{self.partitioner}+{self.placement}"
             f"/{self.topology}/P{self.num_parts}"
         )
+        return f"{base}@s{self.scale:g}" if self.scale_in_key else base
 
     @property
     def is_baseline(self) -> bool:
@@ -67,11 +72,23 @@ class GridSpec:
     # contention pass (repro.nocsim): every config × routing arm through the
     # stacked queue simulator, numpy↔jax parity recorded in the payload.
     contention: bool = False
+    # Multi-scale axis (`--grid scale`): when set, the cross product gains a
+    # workload-scale dimension and every cell key carries its scale suffix;
+    # None keeps the single `scale` above (and the historical keys).
+    scales: tuple[float, ...] | None = None
+    # When set, run_sweep routes traffic extraction through the sparse
+    # streaming path (`SweepCache.traffic(layout="auto", edge_block=...)`):
+    # per-edge transients bounded at O(edge_block) and the cache persisted as
+    # content-hashed shards instead of one whole-matrix file.
+    traffic_edge_block: int | None = None
 
     def schemes(self) -> tuple[tuple[str, str], ...]:
         if self.pair_schemes:
             return tuple(zip(self.partitioners, self.placements))
         return tuple(itertools.product(self.partitioners, self.placements))
+
+    def scale_axis(self) -> tuple[float, ...]:
+        return self.scales if self.scales is not None else (self.scale,)
 
     def expand(self) -> list[SweepConfig]:
         return [
@@ -82,11 +99,17 @@ class GridSpec:
                 placement=pl,
                 topology=t,
                 num_parts=p,
-                scale=self.scale,
+                scale=s,
                 seed=self.seed,
+                scale_in_key=self.scales is not None,
             )
-            for w, a, (pt, pl), t, p in itertools.product(
-                self.workloads, self.algorithms, self.schemes(), self.topologies, self.parts
+            for w, a, (pt, pl), t, p, s in itertools.product(
+                self.workloads,
+                self.algorithms,
+                self.schemes(),
+                self.topologies,
+                self.parts,
+                self.scale_axis(),
             )
         ]
 
@@ -98,6 +121,7 @@ class GridSpec:
             * len(self.schemes())
             * len(self.topologies)
             * len(self.parts)
+            * len(self.scale_axis())
         )
 
 
@@ -184,6 +208,23 @@ GRIDS: dict[str, GridSpec] = {
         contention=True,
         **_PROPOSED_VS_BASELINE,
     ),
+    # Published-workload-size scaling (`--grid scale`): the sparse-first
+    # pipeline (streamed traffic extraction, sharded traffic cache) on the
+    # heaviest Table-2 social graph at 5×–25× the default 1% scale —
+    # soc-pokec at scale 0.25 is ~7.7M edges, where whole-edge-list
+    # transients start to matter.  Proposed vs baseline scheme per scale;
+    # §Scale in EXPERIMENTS.md reports the per-stage wall time and the
+    # process peak RSS recorded after every pipeline stage.
+    "scale": GridSpec(
+        name="scale",
+        workloads=("soc-pokec",),
+        algorithms=("pagerank",),
+        topologies=("mesh2d",),
+        parts=(16,),
+        scales=(0.05, 0.1, 0.25),
+        traffic_edge_block=1 << 20,
+        **_PROPOSED_VS_BASELINE,
+    ),
     "torus": GridSpec(
         name="torus",
         workloads=("amazon", "soc-pokec"),
@@ -203,5 +244,8 @@ def grid_by_name(name: str, *, scale: float | None = None) -> GridSpec:
     except KeyError:
         raise ValueError(f"unknown grid {name!r}; options: {sorted(GRIDS)}") from None
     if scale is not None:
-        grid = dataclasses.replace(grid, scale=scale)
+        # An explicit override pins multi-scale grids to the one scale too
+        # (scales=None), e.g. `--grid scale --scale 0.1` for the verify.sh
+        # memory-budget guard.
+        grid = dataclasses.replace(grid, scale=scale, scales=None)
     return grid

@@ -94,6 +94,8 @@ __all__ = [
     "greedy_construct_batch",
     "torus_construct_batch",
     "place_batch",
+    "sparse_weighted_hops_batch",
+    "swap_delta_pairs_batch",
     "PlacementBatchStats",
     "BATCH_SEARCH_METHODS",
     "BATCH_CONSTRUCT_METHODS",
@@ -381,6 +383,156 @@ def torus_construct_batch(
 
 
 # ---------------------------------------------------------------------------
+# sparse-first batched kernels: H from COO triplets and exact candidate-pair
+# deltas, stacked over configs — numpy float64 reference (bit-exact to the
+# serial `core.placement` kernels in the integer-byte domain, see that
+# module's sparse-kernel banner) and a jitted jax f32 path (≤ ~1e-5 relative,
+# parity-tested in tests/test_sparse_traffic.py).
+# ---------------------------------------------------------------------------
+
+
+def _pad_coo(
+    coos: list[tuple[np.ndarray, np.ndarray, np.ndarray]]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-config COO triplets, padding nnz to the batch maximum with
+    zero-weight (0, 0) entries (harmless: they gather d[site_0, site_0] = 0
+    weighted by 0)."""
+    nnz_max = max((r.size for r, _, _ in coos), default=0)
+    c = len(coos)
+    rows = np.zeros((c, max(nnz_max, 1)), dtype=np.int64)
+    cols = np.zeros_like(rows)
+    vals = np.zeros(rows.shape, dtype=np.float64)
+    for k, (r, cc, v) in enumerate(coos):
+        rows[k, : r.size] = r
+        cols[k, : r.size] = cc
+        vals[k, : r.size] = v
+    return rows, cols, vals
+
+
+_JAX_SPARSE_H = None
+
+
+def _jax_sparse_h_fn():
+    global _JAX_SPARSE_H
+    if _JAX_SPARSE_H is not None:
+        return _JAX_SPARSE_H
+    import jax
+    import jax.numpy as jnp
+
+    def h(rows, cols, vals, d, sites):  # (C,nnz) ×3, (C,S,S), (C,n)
+        cidx = jnp.arange(sites.shape[0])[:, None]
+        sr = jnp.take_along_axis(sites, rows, axis=1)
+        sc = jnp.take_along_axis(sites, cols, axis=1)
+        return (vals * d[cidx, sr, sc]).sum(axis=1)
+
+    _JAX_SPARSE_H = jax.jit(h)
+    return _JAX_SPARSE_H
+
+
+def sparse_weighted_hops_batch(
+    coos: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+    sites: list[np.ndarray] | np.ndarray,
+    topologies: list[Topology],
+    *,
+    backend: str = "auto",
+) -> tuple[np.ndarray, str]:
+    """Stacked `core.placement.sparse_weighted_hops`: per config a COO
+    triplet (rows, cols, vals) — e.g. a `SparseTraffic`'s — a site array and
+    a topology (equal router counts stack; mixed topologies fine).  Returns
+    ((C,) H values, backend used).  The numpy backend matches the serial
+    gather bit-for-bit; jax is f32 (≤ ~1e-5 relative on real traffic)."""
+    sites_a = np.stack([np.asarray(s, dtype=np.int64) for s in sites])
+    d = np.stack([t.distance_matrix().astype(np.float64) for t in topologies])
+    rows, cols, vals = _pad_coo(coos)
+    backend = resolve_backend(backend, int(vals.size + d.size))
+    if backend == "jax":
+        import jax.numpy as jnp
+
+        scale = np.maximum(np.abs(vals).max(axis=1), 1.0)[:, None]
+        h = _jax_sparse_h_fn()(
+            jnp.asarray(rows),
+            jnp.asarray(cols),
+            jnp.asarray(vals / scale),
+            jnp.asarray(d, dtype=np.float32),
+            jnp.asarray(sites_a),
+        )
+        return np.asarray(h, np.float64) * scale[:, 0], backend
+    cidx = np.arange(sites_a.shape[0])[:, None]
+    sr = np.take_along_axis(sites_a, rows, axis=1)
+    sc = np.take_along_axis(sites_a, cols, axis=1)
+    return (vals * d[cidx, sr, sc]).sum(axis=1), backend
+
+
+_JAX_PAIR_DELTAS = None
+
+
+def _jax_pair_deltas_fn():
+    global _JAX_PAIR_DELTAS
+    if _JAX_PAIR_DELTAS is not None:
+        return _JAX_PAIR_DELTAS
+    import jax
+    import jax.numpy as jnp
+
+    def deltas(w, d, site, pi, pj):  # (n,n), (S,S), (n,), (P,), (P,)
+        dsite = d[site]  # (n, S)
+        dss = dsite[:, site]
+        diag = jnp.einsum("ik,ki->i", w, dss)
+        a_ij = jnp.einsum("pk,kp->p", w[pi], dsite[:, site[pj]])
+        a_ji = jnp.einsum("pk,kp->p", w[pj], dsite[:, site[pi]])
+        dij = d[site[pi], site[pj]]
+        return a_ij + a_ji + 2.0 * w[pi, pj] * dij - diag[pi] - diag[pj]
+
+    _JAX_PAIR_DELTAS = jax.jit(jax.vmap(deltas))
+    return _JAX_PAIR_DELTAS
+
+
+def swap_delta_pairs_batch(
+    weights: list[np.ndarray],
+    topologies: list[Topology],
+    sites: list[np.ndarray] | np.ndarray,
+    pairs: list[tuple[np.ndarray, np.ndarray]],
+    *,
+    backend: str = "auto",
+) -> tuple[list[np.ndarray], str]:
+    """Stacked `core.placement.swap_delta_pairs`: per config raw (n, n)
+    weights (symmetrized internally), a topology, a site array and a
+    candidate-pair set (pi, pj) — e.g. from `swap_candidates_topk`.  Pair
+    counts are padded to the batch maximum with (0, 1) no-op entries and
+    trimmed on return.  Returns (per-config delta arrays in input order,
+    backend used)."""
+    from repro.core.placement import swap_delta_pairs
+
+    w = np.stack([symmetrize_weights(wi) for wi in weights])
+    d = np.stack([t.distance_matrix().astype(np.float64) for t in topologies])
+    sites_a = np.stack([np.asarray(s, dtype=np.int64) for s in sites])
+    p_max = max((p[0].size for p in pairs), default=0)
+    backend = resolve_backend(backend, int(w.size + d.size))
+    if backend == "jax":
+        import jax.numpy as jnp
+
+        pi = np.zeros((len(pairs), max(p_max, 1)), dtype=np.int64)
+        pj = np.ones_like(pi)
+        for k, (a, b) in enumerate(pairs):
+            pi[k, : a.size] = a
+            pj[k, : b.size] = b
+        c = w.shape[0]
+        scale = np.maximum(w.reshape(c, -1).max(axis=1), 1.0)[:, None, None]
+        out = _jax_pair_deltas_fn()(
+            jnp.asarray(w / scale),
+            jnp.asarray(d, dtype=np.float32),
+            jnp.asarray(sites_a),
+            jnp.asarray(pi),
+            jnp.asarray(pj),
+        )
+        out = np.asarray(out, np.float64) * scale[:, :, 0]
+        return [out[k, : pairs[k][0].size] for k in range(len(pairs))], backend
+    return [
+        swap_delta_pairs(w[k], d[k], sites_a[k], pairs[k][0], pairs[k][1])
+        for k in range(len(pairs))
+    ], backend
+
+
+# ---------------------------------------------------------------------------
 # numpy backend: the reference stacked recursion
 # ---------------------------------------------------------------------------
 
@@ -402,12 +554,80 @@ def _deltas_numpy(w: np.ndarray, d: np.ndarray, sites: np.ndarray, occ: np.ndarr
     return ds, dm
 
 
+def _best_blocked_numpy(
+    w: np.ndarray, d: np.ndarray, sites: np.ndarray, occ: np.ndarray, block: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One step's (best swap flat index, value, best move flat index, value)
+    per config, streamed over row blocks — the memory-bounded form of
+    `_deltas_numpy` + argmin: transients are O(C·block·max(n, S)) instead of
+    the full (C, n, n) + (C, n, S) delta stacks.  Row blocks scan in
+    ascending order with a strict-< update, which is `argmin`'s
+    first-occurrence row-major tie-break, so in the integer-byte weight
+    domain the selected candidates are bit-identical to the dense path's."""
+    c, n = sites.shape
+    s_count = d.shape[1]
+    cidx = np.arange(c)
+    dsite = d[cidx[:, None], sites]  # (C, n, S): d(site_k, t)
+    site_cols = sites[:, None, :]  # gather helper (C, 1, n)
+    diag = np.empty((c, n), dtype=np.float64)
+    for start in range(0, n, block):
+        sl = slice(start, min(start + block, n))
+        g = np.take_along_axis(
+            dsite, np.broadcast_to(sites[:, None, sl], (c, n, sl.stop - sl.start)), axis=2
+        )  # (C, n, b): d(site_k, site_i) for i∈blk
+        diag[:, sl] = np.einsum("cbk,ckb->cb", w[:, sl], g)
+    best_swap = np.zeros(c, dtype=np.int64)
+    swap_val = np.full(c, np.inf)
+    best_move = np.zeros(c, dtype=np.int64)
+    move_val = np.full(c, np.inf)
+    for start in range(0, n, block):
+        sl = slice(start, min(start + block, n))
+        b = sl.stop - sl.start
+        q_b = w[:, sl] @ dsite  # (C, b, S): cost of i∈blk at every router
+        a_rows = np.take_along_axis(q_b, np.broadcast_to(site_cols, (c, b, n)), axis=2)
+        g = np.take_along_axis(
+            dsite, np.broadcast_to(sites[:, None, sl], (c, n, b)), axis=2
+        )  # (C, n, b)
+        a_cols = (w @ g).transpose(0, 2, 1)  # (C, b, n): A[j, i∈blk]
+        dss_rows = np.take_along_axis(
+            dsite[:, sl], np.broadcast_to(site_cols, (c, b, n)), axis=2
+        )
+        ds_b = (
+            a_rows
+            + a_cols
+            + 2.0 * w[:, sl] * dss_rows
+            - diag[:, sl, None]
+            - diag[:, None, :]
+        )
+        ds_b[:, np.arange(b), np.arange(sl.start, sl.stop)] = np.inf
+        flat = ds_b.reshape(c, -1)
+        k = flat.argmin(axis=1)
+        v = flat[cidx, k]
+        ri, cj = np.divmod(k, n)
+        better = v < swap_val
+        swap_val = np.where(better, v, swap_val)
+        best_swap = np.where(better, (sl.start + ri) * n + cj, best_swap)
+        dm_b = q_b - diag[:, sl, None]  # (C, b, S); d symmetric
+        dm_b[np.broadcast_to(occ[:, None, :], dm_b.shape)] = np.inf
+        flat = dm_b.reshape(c, -1)
+        k = flat.argmin(axis=1)
+        v = flat[cidx, k]
+        ri, t = np.divmod(k, s_count)
+        better = v < move_val
+        move_val = np.where(better, v, move_val)
+        best_move = np.where(better, (sl.start + ri) * s_count + t, best_move)
+    return best_swap, swap_val, best_move, move_val
+
+
 def _descend_numpy(
-    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int
+    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int,
+    swap_block: int | None = None,
 ) -> tuple[np.ndarray, int]:
     """Steepest-descent until every config converges; returns (sites, steps).
     Converged configs drop out of the stacked delta evaluation, so late steps
-    only pay for the stragglers."""
+    only pay for the stragglers.  `swap_block` streams each step's candidate
+    evaluation over row blocks (`_best_blocked_numpy`) instead of
+    materializing the full delta stacks."""
     c, n = sites.shape
     s_count = d.shape[1]
     occ = np.zeros((c, s_count), dtype=bool)
@@ -419,11 +639,16 @@ def _descend_numpy(
         if idx.size == 0:
             break
         steps += 1
-        ds, dm = _deltas_numpy(w[idx], d[idx], sites[idx], occ[idx])
-        best_swap = ds.reshape(idx.size, -1).argmin(axis=1)
-        best_move = dm.reshape(idx.size, -1).argmin(axis=1)
-        swap_val = ds.reshape(idx.size, -1)[np.arange(idx.size), best_swap]
-        move_val = dm.reshape(idx.size, -1)[np.arange(idx.size), best_move]
+        if swap_block is not None:
+            best_swap, swap_val, best_move, move_val = _best_blocked_numpy(
+                w[idx], d[idx], sites[idx], occ[idx], max(1, int(swap_block))
+            )
+        else:
+            ds, dm = _deltas_numpy(w[idx], d[idx], sites[idx], occ[idx])
+            best_swap = ds.reshape(idx.size, -1).argmin(axis=1)
+            best_move = dm.reshape(idx.size, -1).argmin(axis=1)
+            swap_val = ds.reshape(idx.size, -1)[np.arange(idx.size), best_swap]
+            move_val = dm.reshape(idx.size, -1)[np.arange(idx.size), best_move]
         for k, cfg in enumerate(idx):
             if min(swap_val[k], move_val[k]) >= BEST_MOVE_TOL:
                 active[cfg] = False
@@ -542,21 +767,34 @@ def batch_descend(
     *,
     max_steps: int | None = None,
     backend: str = "auto",
+    swap_block: int | None = None,
 ) -> tuple[list[np.ndarray], PlacementBatchStats]:
     """Run the stacked steepest descent for C configs of identical (n, S)
     shape.  `weights` raw (n, n) per config (symmetrized internally),
     `topologies` one per config (distance matrices are stacked, so mixed
     topologies of equal size batch together), `init_sites` (n,) per config.
-    Returns refined site arrays in input order plus engine stats."""
+    Returns refined site arrays in input order plus engine stats.
+
+    `swap_block` streams the numpy reference's per-step candidate evaluation
+    over row blocks (O(C·block·max(n, S)) transients, bit-identical descent
+    path on integer-byte weights); the jax backend always runs the dense
+    jitted recursion — XLA owns its buffers, and `resolve_backend`'s auto
+    threshold routes the genuinely large stacks to numpy — so a set
+    `swap_block` forces the numpy backend."""
     w = np.stack([symmetrize_weights(wi) for wi in weights])
     d = np.stack([t.distance_matrix().astype(np.float64) for t in topologies])
     sites = np.stack([np.asarray(s, dtype=np.int64) for s in init_sites]).copy()
     n = sites.shape[1]
     if max_steps is None:
         max_steps = default_max_steps(n)
-    backend = resolve_backend(backend, int(w.size + sites.shape[0] * n * d.shape[1]))
-    descend = _descend_jax if backend == "jax" else _descend_numpy
-    out, steps = descend(w, d, sites, max_steps)
+    if swap_block is not None:
+        backend = "numpy"
+    else:
+        backend = resolve_backend(backend, int(w.size + sites.shape[0] * n * d.shape[1]))
+    if backend == "jax":
+        out, steps = _descend_jax(w, d, sites, max_steps)
+    else:
+        out, steps = _descend_numpy(w, d, sites, max_steps, swap_block)
     stats = PlacementBatchStats(
         batched_configs=len(topologies), groups=1, steps=steps, backend=backend
     )
@@ -596,6 +834,7 @@ def place_batch(
     max_steps: int | None = None,
     restarts: int = 0,
     backend: str = "auto",
+    swap_block: int | None = None,
 ) -> tuple[list[Placement], PlacementBatchStats]:
     """Batched drop-in for the sweep's per-config `place(...)` loop.
 
@@ -702,7 +941,8 @@ def place_batch(
                 init_list.append(_perturbed(init, topologies[i], seed=(seeds_l[i], r, i)))
                 owner.append(i)
         sites_out, gstats = batch_descend(
-            w_list, topo_list, init_list, max_steps=max_steps, backend=backend
+            w_list, topo_list, init_list, max_steps=max_steps, backend=backend,
+            swap_block=swap_block,
         )
         stats.steps += gstats.steps
         backends_used.add(gstats.backend)

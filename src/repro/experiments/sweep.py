@@ -16,6 +16,7 @@ the H-parity guarantee on real sweep shapes.
 from __future__ import annotations
 
 import dataclasses
+import resource
 import time
 from typing import Callable
 
@@ -37,6 +38,13 @@ __all__ = ["SweepRecord", "SweepResult", "run_sweep", "figure_comparisons", "wor
 # empty frontier.
 TRACE_ITERS = {"pagerank": 40}
 DEFAULT_TRACE_ITERS = 200
+
+
+def peak_rss_mb() -> float:
+    """Process-lifetime peak resident set in MiB (`ru_maxrss` is KiB on
+    Linux).  Monotone, so sampling it after each sweep stage yields the
+    running peak *through* that stage — the §Scale memory column."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +85,9 @@ class SweepResult:
     timings: dict[str, float]
     backend: str
     placement_stats: dict = dataclasses.field(default_factory=dict)
+    # Running process peak RSS (MiB) sampled after each pipeline stage
+    # (peak_rss_mb): the §Scale memory column.
+    memory: dict = dataclasses.field(default_factory=dict)
     # `--grid contention` payload (repro.nocsim.contention_sweep_payload):
     # per config × routing-arm contended records + backend parity; None for
     # grids without the contention pass.
@@ -92,6 +103,7 @@ class SweepResult:
             "cache_stats": self.cache_stats,
             "timings": self.timings,
             "placement_stats": self.placement_stats,
+            "memory": self.memory,
             "contention": self.contention,
         }
 
@@ -152,25 +164,46 @@ def run_sweep(
 
     say(f"[sweep:{grid.name}] {len(configs)} configs, backend={backend}")
     t0 = time.perf_counter()
-    used = {c.workload for c in configs}
-    if graphs is None:
-        graphs = table2_workloads(scale=grid.scale, seed=grid.seed)
-    graphs = {k: g for k, g in graphs.items() if k in used}
-    missing = used - graphs.keys()
-    if missing:
-        raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
-    wl_stats = {k: workload_stats(k, g) for k, g in graphs.items()}
+    memory = {"start_mb": peak_rss_mb()}
+    # Graphs are keyed (workload, scale): single-scale grids have one scale
+    # for every config, multi-scale grids (`grid.scales`) regenerate each
+    # workload per scale.  A caller-supplied `graphs` dict (name → graph)
+    # serves every scale — its single-scale contract is documented above.
+    used_pairs = sorted({(c.workload, c.scale) for c in configs})
+    used_names = tuple(sorted({w for w, _ in used_pairs}))
+    gmap: dict[tuple[str, float], object] = {}
+    if graphs is not None:
+        missing = set(used_names) - graphs.keys()
+        if missing:
+            raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
+        gmap = {(w, s): graphs[w] for w, s in used_pairs}
+    else:
+        for s in sorted({s for _, s in used_pairs}):
+            names = tuple(w for w, s2 in used_pairs if s2 == s)
+            gen = table2_workloads(scale=s, seed=grid.seed, names=names)
+            missing = set(names) - gen.keys()
+            if missing:
+                raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
+            for w in names:
+                gmap[(w, s)] = gen[w]
+    multi_scale = grid.scales is not None
+    wl_stats = {
+        (f"{w}@s{s:g}" if multi_scale else w): workload_stats(w, g)
+        for (w, s), g in gmap.items()
+    }
     t_graphs = time.perf_counter() - t0
+    memory["graphs_mb"] = peak_rss_mb()
 
-    # ---- traces (content-hash cached; one per workload × algorithm) --------
+    # ---- traces (content-hash cached; one per workload × algorithm × scale) -
     t0 = time.perf_counter()
     traces = {}
-    for w, a in sorted({(c.workload, c.algorithm) for c in configs}):
-        traces[(w, a)] = cache.trace(
-            graphs[w], a, max_iterations=TRACE_ITERS.get(a, DEFAULT_TRACE_ITERS)
+    for w, a, s in sorted({(c.workload, c.algorithm, c.scale) for c in configs}):
+        traces[(w, a, s)] = cache.trace(
+            gmap[(w, s)], a, max_iterations=TRACE_ITERS.get(a, DEFAULT_TRACE_ITERS)
         )
-        say(f"[sweep:{grid.name}] traced {w}/{a}: {traces[(w, a)].num_iterations} iters")
+        say(f"[sweep:{grid.name}] traced {w}/{a}@s{s:g}: {traces[(w, a, s)].num_iterations} iters")
     t_trace = time.perf_counter() - t0
+    memory["trace_mb"] = peak_rss_mb()
 
     # ---- per-config partition → traffic ------------------------------------
     t0 = time.perf_counter()
@@ -178,16 +211,25 @@ def run_sweep(
     traffics, parts_list, topologies, per_config_us = [], [], [], []
     for c in configs:
         tc0 = time.perf_counter()
-        g = graphs[c.workload]
-        pkey = (c.workload, c.partitioner, c.num_parts)
+        g = gmap[(c.workload, c.scale)]
+        pkey = (c.workload, c.scale, c.partitioner, c.num_parts)
         part = partitions.get(pkey)
         if part is None:
             part = partitions[pkey] = cache.partition(g, c.partitioner, c.num_parts)
-        traffics.append(cache.traffic(g, part, traces[(c.workload, c.algorithm)]))
+        traffics.append(
+            cache.traffic(
+                g,
+                part,
+                traces[(c.workload, c.algorithm, c.scale)],
+                layout="dense" if grid.traffic_edge_block is None else "auto",
+                edge_block=grid.traffic_edge_block,
+            )
+        )
         parts_list.append(part)
         topologies.append(auto_mesh_for_parts(c.num_parts, c.topology))
         per_config_us.append((time.perf_counter() - tc0) * 1e6)
     t_pt = time.perf_counter() - t0
+    memory["partition_traffic_mb"] = peak_rss_mb()
 
     # ---- batched placement search (the second vectorized hot path) ---------
     t0 = time.perf_counter()
@@ -201,6 +243,7 @@ def run_sweep(
         backend=backend,
     )
     t_placement = time.perf_counter() - t0
+    memory["placement_mb"] = peak_rss_mb()
     placement_stats = pstats.as_dict()
     say(
         f"[sweep:{grid.name}] placement: {pstats.batched_configs} searched "
@@ -242,7 +285,9 @@ def run_sweep(
         )
 
     # ---- batched evaluation (the vectorized hot path) ----------------------
-    iters = np.array([traces[(c.workload, c.algorithm)].num_iterations for c in configs])
+    iters = np.array(
+        [traces[(c.workload, c.algorithm, c.scale)].num_iterations for c in configs]
+    )
     t0 = time.perf_counter()
     results = simulate_batch(
         traffics, placements, params=params, num_iterations=iters, backend=backend
@@ -265,12 +310,13 @@ def run_sweep(
             f"({t_serial_loop/max(t_batched, 1e-12):.1f}x)"
         )
 
+    memory["batched_eval_mb"] = peak_rss_mb()
     shared_us = (t_batched + t_placement) * 1e6 / max(1, len(configs))
     records = []
     for c, traffic, placement, res, cfg_us in zip(
         configs, traffics, placements, results, per_config_us
     ):
-        g = graphs[c.workload]
+        g = gmap[(c.workload, c.scale)]
         graph_bytes = (g.num_edges * 2 + g.num_nodes) * 8  # ET + props @ 8B words
         records.append(
             SweepRecord(
@@ -279,7 +325,9 @@ def run_sweep(
                 num_edges=g.num_edges,
                 num_iterations=int(iters[len(records)]),
                 placement_method=placement.method,
-                edge_balance=partitions[(c.workload, c.partitioner, c.num_parts)].edge_balance(),
+                edge_balance=partitions[
+                    (c.workload, c.scale, c.partitioner, c.num_parts)
+                ].edge_balance(),
                 phase_norm=traffic.normalized_by(graph_bytes),
                 result=res,
                 elapsed_us=cfg_us + shared_us,
@@ -304,6 +352,7 @@ def run_sweep(
             f"numpy↔jax parity {parity if parity is None else f'{parity:.2e}'}"
         )
 
+    memory["final_mb"] = peak_rss_mb()
     timings = {
         "graphs_s": t_graphs,
         "trace_s": t_trace,
@@ -323,6 +372,7 @@ def run_sweep(
         timings=timings,
         backend=backend,
         placement_stats=placement_stats,
+        memory=memory,
         contention=contention,
     )
 
@@ -335,10 +385,15 @@ def figure_comparisons(records: list[SweepRecord]) -> list[dict]:
     cells: dict[tuple, dict[str, SweepRecord]] = {}
     for r in records:
         c = r.config
-        cell = cells.setdefault((c.workload, c.algorithm, c.topology, c.num_parts), {})
+        # scale is a cell axis so multi-scale grids pair proposed-vs-baseline
+        # within each scale; single-scale grids have one scale throughout and
+        # keep their historical cells.
+        cell = cells.setdefault(
+            (c.workload, c.algorithm, c.topology, c.num_parts, c.scale), {}
+        )
         cell["baseline" if c.is_baseline else f"{c.partitioner}+{c.placement}"] = r
     out = []
-    for (workload, alg, topo, parts), cell in sorted(cells.items()):
+    for (workload, alg, topo, parts, scale), cell in sorted(cells.items()):
         base = cell.get("baseline")
         if base is None:
             continue
@@ -352,6 +407,7 @@ def figure_comparisons(records: list[SweepRecord]) -> list[dict]:
                     "algorithm": alg,
                     "topology": topo,
                     "num_parts": parts,
+                    "scale": scale,
                     "scheme": scheme,
                     "avg_hops_optimized": opt.avg_hops,
                     "avg_hops_baseline": b.avg_hops,

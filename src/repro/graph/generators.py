@@ -116,7 +116,11 @@ WORKLOADS = (
 
 
 def table2_workloads(
-    *, scale: float = 1.0, seed: int = 0, weighted: bool = False
+    *,
+    scale: float = 1.0,
+    seed: int = 0,
+    weighted: bool = False,
+    names: tuple[str, ...] | None = None,
 ) -> dict[str, HostGraph]:
     """The paper's four workloads at `scale` (1.0 = published size).
 
@@ -125,9 +129,16 @@ def table2_workloads(
     (α, skew) are scale-invariant under R-MAT so the mapping results transfer
     — EXPERIMENTS.md §Calibration reports both the scale used and the
     measured skew vs. Fig. 4.
+
+    `names` restricts generation to those workloads (large-scale sweeps must
+    not pay for graphs they never use); each graph's seed stays tied to its
+    Table-2 position, so a filtered subset is bit-identical to slicing the
+    full dict.
     """
     out = {}
     for i, wl in enumerate(WORKLOADS):
+        if names is not None and wl.name not in names:
+            continue
         n = max(64, int(wl.num_nodes * scale))
         e = max(256, int(wl.num_edges * scale))
         out[wl.name] = rmat(n, e, seed=seed + i, weighted=weighted, name=wl.name)

@@ -46,6 +46,11 @@ from repro.nocsim.routes import ROUTING_POLICIES
 
 __all__ = ["contended_batch", "contention_sweep_payload", "PARITY_RTOL"]
 
+# Default window-chunk size when a caller asks for streaming without picking
+# one: big enough to amortise dispatch, small enough to bound the stepper's
+# working set.
+DEFAULT_WINDOW_CHUNK = 64
+
 # The numpy↔jax agreement contract on contended T_network, asserted per
 # contention sweep and gated by `repro.experiments.report --check`.
 PARITY_RTOL = 1e-6
@@ -63,13 +68,20 @@ def _resolve_backend(backend: str) -> str:
     return "jax"
 
 
-def _step_numpy(inj: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def _step_numpy(
+    inj: np.ndarray, backlog0: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray]:
     """Reference recursion: `inj` is (W, C, L) in units of one window's
     service (cap ≡ 1); returns (serviced, backlog) timelines of the same
     shape.  Windows advance in a Python loop; configs and links are
-    vectorized."""
+    vectorized.  `backlog0` carries the state across window chunks (the
+    recursion is strictly sequential over windows, so resuming it from the
+    previous chunk's final backlog reproduces the unchunked timelines
+    bit-for-bit — on both backends)."""
     w = inj.shape[0]
-    backlog = np.zeros(inj.shape[1:], dtype=np.float64)
+    backlog = (
+        np.zeros(inj.shape[1:], dtype=np.float64) if backlog0 is None else backlog0.copy()
+    )
     serviced_tl = np.empty_like(inj)
     backlog_tl = np.empty_like(inj)
     for step in range(w):
@@ -93,14 +105,13 @@ def _jax_step_fn():
     import jax
     import jax.numpy as jnp
 
-    def run(inj):  # (W, C, L) normalised injections, cap ≡ 1
+    def run(inj, init):  # (W, C, L) normalised injections, cap ≡ 1
         def body(backlog, injected):
             arrived = backlog + injected
             serviced = jnp.minimum(arrived, 1.0)
             backlog = arrived - serviced
             return backlog, (serviced, backlog)
 
-        init = jnp.zeros(inj.shape[1:], dtype=inj.dtype)
         _, (serviced_tl, backlog_tl) = jax.lax.scan(body, init, inj)
         return serviced_tl, backlog_tl
 
@@ -108,11 +119,39 @@ def _jax_step_fn():
     return _JAX_STEP
 
 
-def _step_jax(inj: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def _step_jax(
+    inj: np.ndarray, backlog0: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray]:
     import jax.numpy as jnp
 
-    serviced, backlog = _jax_step_fn()(jnp.asarray(inj, dtype=jnp.float32))
+    init = (
+        jnp.zeros(inj.shape[1:], dtype=jnp.float32)
+        if backlog0 is None
+        else jnp.asarray(backlog0, dtype=jnp.float32)
+    )
+    serviced, backlog = _jax_step_fn()(jnp.asarray(inj, dtype=jnp.float32), init)
     return np.asarray(serviced, np.float64), np.asarray(backlog, np.float64)
+
+
+def _step_chunked(step, inj: np.ndarray, window_chunk: int | None):
+    """Run the window recursion in chunks of `window_chunk` windows, carrying
+    the backlog state between chunks.  The recursion is sequential in the
+    window axis, so the chunk boundary state equals the state the unchunked
+    run has at that window — the chunked timelines are bit-identical on both
+    backends for ANY chunk size (property-tested).  The stepper's working set
+    (and the jax transfer/scan extent) is bounded at O(chunk·C·L)."""
+    if window_chunk is None:
+        return step(inj, None)
+    w = inj.shape[0]
+    chunk = max(1, int(window_chunk))
+    serviced_parts, backlog_parts = [], []
+    carry: np.ndarray | None = None
+    for start in range(0, w, chunk):
+        s_tl, b_tl = step(inj[start : min(start + chunk, w)], carry)
+        serviced_parts.append(s_tl)
+        backlog_parts.append(b_tl)
+        carry = b_tl[-1]
+    return np.concatenate(serviced_parts), np.concatenate(backlog_parts)
 
 
 def contended_batch(
@@ -124,12 +163,16 @@ def contended_batch(
     num_iterations: np.ndarray | list[int] | int = 1,
     backend: str = "auto",
     schedules: list[ConfigSchedule] | None = None,
+    window_chunk: int | None = None,
 ) -> list[NocSimResult]:
     """Batched contended simulation: one `NocSimResult` per (traffic,
     placement) pair, in input order.  All configs advance through one
     stacked recursion regardless of topology (the link axis is padded to
     the batch maximum).  `schedules` lets a caller running several backends
-    over the same configs (the parity measurement) build them once."""
+    over the same configs (the parity measurement) build them once.
+    `window_chunk` streams the recursion over window chunks with the backlog
+    carried between them — bit-identical to the unchunked run on both
+    backends for any chunk size (see `_step_chunked`)."""
     if len(traffics) != len(placements):
         raise ValueError("traffics and placements must pair up")
     n_cfg = len(traffics)
@@ -149,7 +192,7 @@ def contended_batch(
         if s.cap_bytes > 0.0:
             inj[:, c, : s.inj.shape[1]] = s.inj / s.cap_bytes
     step = _step_jax if backend == "jax" else _step_numpy
-    serviced_tl, backlog_tl = step(inj)
+    serviced_tl, backlog_tl = _step_chunked(step, inj, window_chunk)
     results = []
     for c, s in enumerate(schedules):
         l = s.inj.shape[1]

@@ -1,0 +1,96 @@
+"""Golden regression lock on the paper-grid sweep records.
+
+`tests/fixtures/golden_paper_amazon.json` freezes the amazon slice (12
+records: 3 algorithms × 2 schemes × 2 topologies at scale 0.01) of the
+committed BENCH_sweep.json from *before* the sparse-first pipeline refactor.
+This test re-runs that slice through the refactored pipeline and asserts it
+reproduces the frozen records:
+
+  * numpy backend: bit-exact on every frozen field.  The whole pipeline is
+    integer-domain (byte counts × integer hop distances, < 2^53), so every
+    sparse/blocked re-association is exactly associative — no tolerance.
+  * jax backend: rtol 1e-6 on float fields.  The jax scoring path contracts
+    in f32 after per-config max-normalization; the measured max relative
+    drift on these records is ~3e-8, so 1e-6 is slack by ~30× while still
+    catching any real regression.
+
+Tolerance exceptions, each documented where applied:
+  * `elapsed_us` — wall-clock timing, never comparable.
+"""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.experiments.grid import GRIDS
+from repro.experiments.sweep import run_sweep
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_paper_amazon.json"
+
+# Wall-clock measurement; varies run to run by construction.
+SKIP_FIELDS = {"elapsed_us"}
+
+JAX_RTOL = 1e-6  # f32 max-normalized contraction; measured drift ~3e-8
+
+
+def _amazon_grid():
+    return dataclasses.replace(GRIDS["paper"], workloads=("amazon",))
+
+
+def _run_records(backend):
+    result = run_sweep(_amazon_grid(), cache_dir=None, backend=backend)
+    records = result.to_dict()["records"]
+    return {r["key"]: r for r in records}, result.backend
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(FIXTURE.read_text())
+
+
+def _compare(golden_records, got, *, rtol):
+    assert len(golden_records) == 12
+    for ref in golden_records:
+        key = ref["key"]
+        assert key in got, f"record {key} missing from refactored sweep"
+        rec = got[key]
+        for field, want in ref.items():
+            if field in SKIP_FIELDS:
+                continue
+            have = rec[field]
+            if isinstance(want, float) and rtol:
+                scale = max(abs(want), 1e-300)
+                assert abs(have - want) / scale <= rtol, (
+                    f"{key}.{field}: {have!r} vs golden {want!r}"
+                )
+            else:
+                assert have == want, f"{key}.{field}: {have!r} vs golden {want!r}"
+
+
+def test_numpy_backend_reproduces_golden_bitexact(golden):
+    got, backend = _run_records("numpy")
+    assert backend == "numpy"
+    # rtol=0 → exact equality even for floats (integer-domain contract)
+    _compare(golden["records"], got, rtol=0)
+
+
+def test_jax_backend_reproduces_golden_within_f32(golden):
+    try:
+        got, backend = _run_records("jax")
+    except Exception:
+        pytest.skip("jax unavailable")
+    if backend != "jax":
+        pytest.skip("jax backend not resolvable in this container")
+    _compare(golden["records"], got, rtol=JAX_RTOL)
+
+
+def test_fixture_matches_committed_bench(golden):
+    """The fixture must stay in sync with the repo's BENCH_sweep.json amazon
+    slice whenever that file is regenerated with the same grid/scale."""
+    bench_path = pathlib.Path(__file__).parent.parent / "BENCH_sweep.json"
+    bench = json.loads(bench_path.read_text())
+    if bench.get("grid", {}).get("scale") != golden["grid"]["scale"]:
+        pytest.skip("BENCH_sweep.json regenerated at a different scale")
+    by_key = {r["key"]: r for r in bench["records"] if r["workload"] == "amazon"}
+    _compare(golden["records"], by_key, rtol=0)

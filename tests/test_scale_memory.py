@@ -1,0 +1,42 @@
+"""Memory-budget guard for the sparse-first pipeline at published scale.
+
+Runs the `scale` grid's soc-pokec config at scale 0.1 (160k vertices, 3.06M
+edges) and asserts the process peak RSS stays under budget.  Measured peak on
+the reference container is ~1.03 GiB, dominated by R-MAT generation
+transients; the 2 GiB budget leaves ~2× headroom while still failing fast if
+a refactor reintroduces an O(|E|)-per-stage dense materialization (the
+pre-sparse pipeline could not run this config at all).
+
+Gated twice so tier-1 stays fast: the `slow` marker, and the
+REPRO_SCALE_RSS=1 env var set by scripts/verify.sh.
+"""
+import dataclasses
+import os
+
+import pytest
+
+PEAK_RSS_BUDGET_MB = 2048
+
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(
+        os.environ.get("REPRO_SCALE_RSS") != "1",
+        reason="set REPRO_SCALE_RSS=1 (scripts/verify.sh does) to run the RSS guard",
+    ),
+]
+
+
+def test_scale_0p1_peak_rss_under_budget():
+    from repro.experiments.grid import GRIDS
+    from repro.experiments.sweep import peak_rss_mb, run_sweep
+
+    grid = dataclasses.replace(GRIDS["scale"], scales=(0.1,))
+    result = run_sweep(grid, cache_dir=None)
+    assert len(result.records) == 2  # proposed vs baseline schemes
+    for rec in result.records:
+        assert rec.num_edges >= 3_000_000
+    assert result.memory["final_mb"] > 0
+    peak = peak_rss_mb()
+    assert peak < PEAK_RSS_BUDGET_MB, (
+        f"scale-0.1 sweep peaked at {peak:.0f} MiB (budget {PEAK_RSS_BUDGET_MB})"
+    )

@@ -103,6 +103,62 @@ print(f"mini sweep ok: speedup={c['speedup']:.2f}x hop_decrease={c['hop_decrease
 EOF
 rm -rf "$out"
 
+echo "== resilience arm (mini faults grid + crash-resume smoke) =="
+# Degraded-fabric pipeline end to end: the 2-unit minifaults grid through
+# FaultSet -> detour routing -> degraded nocsim (jax parity when available)
+# -> evacuation/repair, then a literal kill -9 mid-sweep with a journaled
+# --resume that must reproduce the uninterrupted artifact byte for byte.
+rout="$(mktemp -d)"
+python -m repro.experiments.run --grid minifaults --backend auto -q \
+    --cache-dir "$rout/cache" --sweeps-dir "$rout/a" --journal "$rout/a.journal.json"
+python - "$rout/a/minifaults.json" <<'EOF'
+import json, sys
+payload = json.load(open(sys.argv[1]))["faults"]
+recs = payload["records"]
+assert recs, "minifaults produced no unit records"
+rates = {r["fault_rate"] for r in recs}
+assert rates == {0.0, 0.05}, f"unexpected fault rates {rates}"
+clean = next(r for r in recs if r["fault_rate"] == 0.0)
+faulted = next(r for r in recs if r["fault_rate"] == 0.05)
+assert clean["win"] > 1.0, f"proposed scheme does not win on the clean fabric: {clean['win']}"
+assert faulted["num_dead_links"] > 0 and faulted["num_detoured_flows"] > 0, faulted
+assert payload["repair"], "no repair-ledger rows"
+for row in payload["repair"]:
+    assert row["batch_parity"], f"repair serial/batched mismatch: {row}"
+    assert row["h_repaired"] <= row["h_evacuated"] + 1e-9, row
+assert not payload["quarantined"], f"quarantined units: {payload['quarantined']}"
+parity = payload["backend_parity_max_rel"]
+if parity is not None:  # jax was available -> the degraded arm ran both backends
+    assert parity <= payload["parity_rtol"], f"degraded-arm parity {parity:.3e}"
+    print(f"resilience ok: win {clean['win']:.2f}x -> {faulted['win']:.2f}x at 5% faults;"
+          f" jax parity {parity:.2e} <= {payload['parity_rtol']:g}")
+else:
+    print(f"resilience ok: win {clean['win']:.2f}x -> {faulted['win']:.2f}x at 5% faults;"
+          " jax absent, numpy-only")
+EOF
+# Crash-resume smoke: kill -9 between journal flushes, resume, compare bytes.
+REPRO_FAULTS_UNIT_DELAY=2.0 python -m repro.experiments.run --grid minifaults \
+    --backend auto -q --cache-dir "$rout/cache" --sweeps-dir "$rout/b" \
+    --journal "$rout/b.journal.json" &
+victim=$!
+for _ in $(seq 1 200); do
+    python - "$rout/b.journal.json" <<'EOF' && break
+import json, sys
+try:
+    raise SystemExit(0 if json.load(open(sys.argv[1])).get("units") else 1)
+except (FileNotFoundError, json.JSONDecodeError):
+    raise SystemExit(1)
+EOF
+    sleep 0.1
+done
+kill -9 "$victim" 2>/dev/null || true
+wait "$victim" 2>/dev/null || true
+python -m repro.experiments.run --grid minifaults --backend auto -q --resume \
+    --cache-dir "$rout/cache" --sweeps-dir "$rout/b" --journal "$rout/b.journal.json"
+cmp "$rout/a/minifaults.json" "$rout/b/minifaults.json"
+echo "crash-resume smoke ok: resumed artifact is byte-identical"
+rm -rf "$rout"
+
 echo "== dry-run artifacts (§Dry-run / §Roofline) =="
 # Resumable: committed artifacts/dryrun/*.json cells are read back, only
 # missing/failed cells recompile (minutes each on an empty dir).  Offline- and

@@ -22,9 +22,17 @@ Shards are streamed from disk one at a time and merged through the same
 integer-exact COO accumulator the in-memory streaming path uses, so the
 result is bit-identical to `traffic_from_partition(edge_block=...)`.  A
 missing, truncated, or hash-mismatched shard invalidates only itself: that
-one block is recomputed and rewritten (atomically, via temp-file + rename)
-while every other shard still hits.  `edge_block=None` keeps the historical
-single-file path byte-for-byte.
+one block is recomputed and rewritten while every other shard still hits.
+`edge_block=None` keeps the historical single-file path byte-for-byte.
+
+Crash safety: every cache write (trace, traffic, shard) goes through
+`_atomic_savez` — same-directory temp file, `fsync` of the payload, then
+`os.replace` — so a `kill -9` mid-write can never leave a torn entry behind
+(the journaled `--resume` sweep path leans on this: an interrupted run's
+cache is always either absent or whole).  Shard reads and writes retry
+transient `OSError`s with exponential backoff (`CacheStats.shard_retries`
+counts them); content failures — bad zip, hash mismatch — are never retried,
+they just recompute the block.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import time
 import weakref
 
 import numpy as np
@@ -75,9 +84,45 @@ class CacheStats:
     traffic_misses: int = 0
     shard_hits: int = 0  # sharded-traffic blocks served from disk
     shard_misses: int = 0  # blocks recomputed (absent, truncated, or bad hash)
+    shard_retries: int = 0  # transient-OSError retries across shard reads+writes
 
     def as_dict(self) -> dict[str, int]:
         return dataclasses.asdict(self)
+
+
+# Transient-IO retry policy for shard reads/writes: attempts and the base of
+# the exponential backoff (0.02 s, 0.04 s, ... between tries).
+SHARD_IO_ATTEMPTS = 3
+SHARD_IO_BACKOFF_S = 0.02
+
+
+def _retrying(op, stats: CacheStats | None = None):
+    """Run `op`, retrying transient `OSError`s with exponential backoff; any
+    other exception (corrupt zip, missing key, ...) propagates immediately —
+    content failures are the caller's recompute path, not a retry."""
+    delay = SHARD_IO_BACKOFF_S
+    for attempt in range(SHARD_IO_ATTEMPTS):
+        try:
+            return op()
+        except OSError:
+            if attempt == SHARD_IO_ATTEMPTS - 1:
+                raise
+            if stats is not None:
+                stats.shard_retries += 1
+            time.sleep(delay)
+            delay *= 2.0
+
+
+def _atomic_savez(path: str, **arrays) -> None:
+    """Crash-safe .npz write: same-directory temp name (keeping the .npz
+    suffix `savez` would otherwise append), `fsync` of the payload, then
+    `os.replace` — no reader ever sees a partial file, and a crash mid-write
+    leaves any previous entry intact."""
+    tmp = path + ".tmp.npz"
+    np.savez_compressed(tmp, **arrays)
+    with open(tmp, "rb+") as f:
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _shard_sha(keys: np.ndarray, vals: np.ndarray, total: float) -> str:
@@ -89,18 +134,27 @@ def _shard_sha(keys: np.ndarray, vals: np.ndarray, total: float) -> str:
     return h.hexdigest()
 
 
-def _load_shard(path: str) -> tuple[np.ndarray, np.ndarray, float] | None:
+def _read_shard_payload(path: str) -> tuple[np.ndarray, np.ndarray, float, str]:
+    with np.load(path) as z:
+        return (
+            np.asarray(z["keys"], dtype=np.int64),
+            np.asarray(z["vals"], dtype=np.float64),
+            float(z["total"]),
+            str(z["sha"]),
+        )
+
+
+def _load_shard(
+    path: str, stats: CacheStats | None = None
+) -> tuple[np.ndarray, np.ndarray, float] | None:
     """Read one shard file; `None` means "recompute this block": the file is
     missing, unreadable (truncated/corrupt zip), structurally wrong, or its
-    stored content hash does not match the payload."""
+    stored content hash does not match the payload.  Transient `OSError`s are
+    retried before the shard is given up on."""
     if not os.path.exists(path):
         return None
     try:
-        with np.load(path) as z:
-            keys = np.asarray(z["keys"], dtype=np.int64)
-            vals = np.asarray(z["vals"], dtype=np.float64)
-            total = float(z["total"])
-            stored = str(z["sha"])
+        keys, vals, total, stored = _retrying(lambda: _read_shard_payload(path), stats)
     except Exception:  # BadZipFile, KeyError, OSError, pickle refusal, ...
         return None
     if stored != _shard_sha(keys, vals, total):
@@ -179,7 +233,7 @@ class SweepCache:
             prepared, ALGORITHMS[algorithm](), source=source, max_iterations=max_iterations
         )
         if path is not None:
-            np.savez_compressed(
+            _atomic_savez(
                 path,
                 props=tr.props,
                 num_iterations=np.int64(tr.num_iterations),
@@ -246,7 +300,7 @@ class SweepCache:
             model=model,
         )
         if path is not None:
-            np.savez_compressed(
+            _atomic_savez(
                 path,
                 num_parts=np.int64(t.num_parts),
                 bytes_matrix=t.bytes_matrix,
@@ -296,23 +350,23 @@ class SweepCache:
         def resolve(k: int, compute) -> tuple[np.ndarray, np.ndarray, float]:
             path = shard_path(k)
             if path is not None:
-                cached = _load_shard(path)
+                cached = _load_shard(path, self.stats)
                 if cached is not None:
                     self.stats.shard_hits += 1
                     return cached
             self.stats.shard_misses += 1
             keys, vals, total = compute()
             if path is not None:
-                # Temp name keeps the .npz suffix (savez would append one).
-                tmp = path + ".tmp.npz"
-                np.savez_compressed(
-                    tmp,
-                    keys=keys,
-                    vals=vals,
-                    total=np.float64(total),
-                    sha=np.str_(_shard_sha(keys, vals, total)),
+                _retrying(
+                    lambda: _atomic_savez(
+                        path,
+                        keys=keys,
+                        vals=vals,
+                        total=np.float64(total),
+                        sha=np.str_(_shard_sha(keys, vals, total)),
+                    ),
+                    self.stats,
                 )
-                os.replace(tmp, path)  # atomic: no reader sees a partial file
             return keys, vals, total
 
         acc = _COOAccumulator()

@@ -81,6 +81,13 @@ class GridSpec:
     # per-edge transients bounded at O(edge_block) and the cache persisted as
     # content-hashed shards instead of one whole-matrix file.
     traffic_edge_block: int | None = None
+    # Resilience axis (`--grid faults`): fractions of the NoC's unidirectional
+    # links to kill (seeded, connectivity-preserving — repro.faults).  When
+    # set, run.py routes the grid to the journaled resilience runner
+    # (`repro.experiments.resilience.run_resilience`) instead of `run_sweep`;
+    # the runner pairs the proposed and baseline schemes itself, one shared
+    # FaultSet per (workload, topology, parts, rate) unit.
+    fault_rates: tuple[float, ...] | None = None
 
     def schemes(self) -> tuple[tuple[str, str], ...]:
         if self.pair_schemes:
@@ -224,6 +231,40 @@ GRIDS: dict[str, GridSpec] = {
         scales=(0.05, 0.1, 0.25),
         traffic_edge_block=1 << 20,
         **_PROPOSED_VS_BASELINE,
+    ),
+    # Graceful degradation (`--grid faults`): the §Contention cells replayed
+    # on fabrics with 0–10% of links killed mid-replay (seeded,
+    # connectivity-preserving; detour routing + backlog redistribution at the
+    # failure window) — §Resilience reports how much of the proposed scheme's
+    # contended win survives each fault rate, plus the tile-death
+    # evacuation/repair ledger at rate 0.  Runs through the journaled,
+    # crash-resumable unit runner (`--resume`).
+    "faults": GridSpec(
+        name="faults",
+        workloads=("amazon", "soc-pokec"),
+        algorithms=("pagerank",),
+        topologies=("mesh2d", "torus2d"),
+        parts=(16,),
+        contention=True,
+        fault_rates=(0.0, 0.01, 0.02, 0.05, 0.10),
+        **_PROPOSED_VS_BASELINE,
+    ),
+    # CI-sized faults grid (scripts/verify.sh + tests/test_crash_resume.py):
+    # one workload/algorithm on a tiny graph, fault-free + one faulted rate.
+    # Placement pinned to quad for the same reason as `mini`: "auto" would
+    # route the 16-shard instance to the exact MILP.
+    "minifaults": GridSpec(
+        name="minifaults",
+        workloads=("amazon",),
+        algorithms=("bfs",),
+        partitioners=("powerlaw", "random"),
+        placements=("quad", "random"),
+        topologies=("mesh2d",),
+        parts=(4,),
+        scale=0.001,
+        contention=True,
+        fault_rates=(0.0, 0.05),
+        pair_schemes=True,
     ),
     "torus": GridSpec(
         name="torus",

@@ -621,17 +621,21 @@ def _best_blocked_numpy(
 
 def _descend_numpy(
     w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int,
-    swap_block: int | None = None,
+    swap_block: int | None = None, blocked: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Steepest-descent until every config converges; returns (sites, steps).
     Converged configs drop out of the stacked delta evaluation, so late steps
     only pay for the stragglers.  `swap_block` streams each step's candidate
     evaluation over row blocks (`_best_blocked_numpy`) instead of
-    materializing the full delta stacks."""
+    materializing the full delta stacks.  `blocked` (C, S) marks routers
+    permanently occupied (dead tiles in the fault-repair path) — no shard may
+    move onto them."""
     c, n = sites.shape
     s_count = d.shape[1]
     occ = np.zeros((c, s_count), dtype=bool)
     np.put_along_axis(occ, sites, True, axis=1)
+    if blocked is not None:
+        occ |= blocked
     active = np.ones(c, dtype=bool)
     steps = 0
     for _ in range(max_steps):
@@ -731,7 +735,8 @@ def _jax_descend_fn():
 
 
 def _descend_jax(
-    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int
+    w: np.ndarray, d: np.ndarray, sites: np.ndarray, max_steps: int,
+    blocked: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     import jax.numpy as jnp
 
@@ -739,6 +744,8 @@ def _descend_jax(
     s_count = d.shape[1]
     occ = np.zeros((c, s_count), dtype=bool)
     np.put_along_axis(occ, sites, True, axis=1)
+    if blocked is not None:
+        occ |= blocked
     # Normalise per config so float32 (jax CPU default) keeps accept
     # decisions stable across the byte-scale range of real traffic; the
     # accept tolerance is widened accordingly (relative to H ~ O(n) after
@@ -797,6 +804,44 @@ def batch_descend(
         out, steps = _descend_numpy(w, d, sites, max_steps, swap_block)
     stats = PlacementBatchStats(
         batched_configs=len(topologies), groups=1, steps=steps, backend=backend
+    )
+    return list(out), stats
+
+
+def repair_batch(
+    weights: list[np.ndarray] | np.ndarray,
+    dists: list[np.ndarray] | np.ndarray,
+    init_sites: list[np.ndarray] | np.ndarray,
+    blocked: list[np.ndarray] | np.ndarray,
+    *,
+    max_steps: int,
+    backend: str = "numpy",
+    swap_block: int | None = None,
+) -> tuple[list[np.ndarray], PlacementBatchStats]:
+    """Stacked counterpart of `repro.faults.repair.repair_descend`: C bounded
+    repair descents in one batched program, seeded from the evacuated
+    layouts.  Unlike `batch_descend` the distance matrices come in explicitly
+    (they are DEGRADED hop counts over the surviving fabric, not
+    `Topology.distance_matrix()`), and `blocked` (S,) per config marks the
+    dead routers as permanently occupied.  The numpy backend replays the
+    serial reference bit-for-bit on integer-byte weights
+    (tests/test_faults_repair.py); `max_steps` is the repair budget — 0
+    returns the evacuated layouts unchanged."""
+    w = np.stack([symmetrize_weights(wi) for wi in weights])
+    d = np.stack([np.asarray(di, dtype=np.float64) for di in dists])
+    sites = np.stack([np.asarray(s, dtype=np.int64) for s in init_sites]).copy()
+    blk = np.stack([np.asarray(b, dtype=bool) for b in blocked])
+    n = sites.shape[1]
+    if swap_block is not None:
+        backend = "numpy"
+    else:
+        backend = resolve_backend(backend, int(w.size + sites.shape[0] * n * d.shape[1]))
+    if backend == "jax":
+        out, steps = _descend_jax(w, d, sites, max_steps, blocked=blk)
+    else:
+        out, steps = _descend_numpy(w, d, sites, max_steps, swap_block, blocked=blk)
+    stats = PlacementBatchStats(
+        batched_configs=sites.shape[0], groups=1, steps=steps, backend=backend
     )
     return list(out), stats
 

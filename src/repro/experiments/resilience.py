@@ -1,0 +1,394 @@
+"""The journaled `--grid faults` runner: graceful degradation, measured.
+
+One *unit* is a (workload, algorithm, topology, parts, fault_rate) cell.
+Per unit the runner builds the proposed and baseline mappings (the grid's
+paired schemes), samples ONE shared `FaultSet` — seeded purely by the unit's
+identity, never by the mapping, so both schemes face the same broken fabric
+— and replays both through the degraded windowed simulator
+(`repro.faults.degraded`): pristine routes up to the failure window, detour
+routes plus backlog redistribution after it.  The headline per unit is
+
+    win = baseline contended T_network / proposed contended T_network
+
+and §Resilience reports win *retention*: win(rate) / win(0) per cell, at the
+grid's fault rates.  Fault-free units additionally run the tile-death
+evacuation/repair experiment (`repro.faults.repair`) on an over-provisioned
+router grid, with the stacked `repair_batch` engine cross-checked against
+the serial reference on every run.
+
+Crash safety: every completed unit is checkpointed to a `SweepJournal`
+(atomic fsync'd JSON, default `artifacts/journals/<grid>.json`) before the
+next one starts; `--resume` skips journaled units, and because each unit's
+payload is a pure function of its config and seed (no wall-clock, no
+process state, numpy backend) the resumed artifact is byte-identical to an
+uninterrupted run (tests/test_crash_resume.py).  A unit that raises or
+exceeds `unit_timeout_s` lands on the quarantine list instead of killing
+the sweep; quarantined units are retried on the next `--resume`.
+
+Set `REPRO_FAULTS_UNIT_DELAY` (seconds) to sleep after each unit's journal
+flush — the crash-resume test's kill window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import time
+
+import numpy as np
+
+from repro.core.noc import Mesh2D
+from repro.core.placement import auto_mesh_for_parts, place, symmetrize_weights
+from repro.core.simulator import SimParams
+from repro.experiments.cache import SweepCache
+from repro.experiments.grid import GridSpec
+from repro.experiments.journal import SweepJournal, UnitTimeout, unit_timeout
+from repro.experiments.placement_batch import repair_batch
+from repro.experiments.sweep import DEFAULT_TRACE_ITERS, TRACE_ITERS
+from repro.faults.degraded import PARITY_RTOL, build_degraded_schedule, degraded_batch
+from repro.faults.model import sample_link_faults, sample_tile_faults
+from repro.faults.repair import evacuate_placement, repair_descend, repair_placement
+from repro.faults.routing import degraded_distance_matrix
+from repro.graph.generators import table2_workloads
+from repro.nocsim.model import NocSimParams
+
+__all__ = ["ResilienceResult", "run_resilience", "unit_ids", "fault_seed"]
+
+# Repair experiment knobs: descent budgets reported per fault-free unit, and
+# the fraction of routers the over-provisioned repair grid adds as spares.
+REPAIR_BUDGETS = (0, 8, 32)
+
+# Scalars of one NocSimResult that enter a unit record (json-safe subset).
+_SCHEME_FIELDS = (
+    "t_network_contended_s",
+    "t_drain_s",
+    "t_serialization_s",
+    "contention_excess",
+    "mean_queue_delay_s",
+    "p99_latency_s",
+    "peak_window_util",
+    "backlogged_window_frac",
+)
+
+
+def fault_seed(workload: str, topology: str, parts: int, rate: float) -> int:
+    """Deterministic per-unit fault seed: a pure function of the unit's
+    identity (NOT of the mapping — both schemes share the fabric), stable
+    across processes (sha256, not the salted builtin hash)."""
+    blob = f"{workload}/{topology}/P{parts}@r{rate:g}".encode()
+    return int(hashlib.sha256(blob).hexdigest()[:8], 16)
+
+
+def unit_ids(grid: GridSpec) -> list[str]:
+    """Every unit id of the grid, in run order."""
+    return [
+        f"{w}/{a}/{t}/P{p}@r{r:g}"
+        for w in grid.workloads
+        for a in grid.algorithms
+        for t in grid.topologies
+        for p in grid.parts
+        for r in (grid.fault_rates or ())
+    ]
+
+
+@dataclasses.dataclass
+class ResilienceResult:
+    grid: GridSpec
+    records: list[dict]  # one per completed unit, run order
+    repair: list[dict]  # repair-ledger rows (fault-free units only)
+    quarantined: dict[str, dict]
+    backend: str
+    backend_parity_max_rel: float | None
+    fail_window: int
+    noc_params: NocSimParams
+    # Cache stats stay OUT of to_dict(): a resumed run traces less than an
+    # uninterrupted one, and the artifact must be byte-identical either way.
+    cache_stats: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        """The faults.json payload (deterministic: no wall-clock, records in
+        run order, quarantine keyed/sorted by unit id)."""
+        return {
+            "grid": dataclasses.asdict(self.grid),
+            "backend": self.backend,
+            "faults": {
+                "records": self.records,
+                "repair": self.repair,
+                "quarantined": {
+                    k: self.quarantined[k] for k in sorted(self.quarantined)
+                },
+                "backend_parity_max_rel": self.backend_parity_max_rel,
+                "parity_rtol": PARITY_RTOL,
+                "fail_window": self.fail_window,
+                "noc_params": dataclasses.asdict(self.noc_params),
+            },
+        }
+
+
+def _scheme_record(result) -> dict:
+    d = dataclasses.asdict(result)
+    return {k: float(d[k]) for k in _SCHEME_FIELDS}
+
+
+def _repair_grid(parts: int) -> Mesh2D:
+    """Over-provisioned router grid for the tile-death experiment: the auto
+    mesh plus one extra column of spares (the auto mesh has exactly 4·parts
+    routers — zero headroom, so ANY tile death would be unrecoverable)."""
+    auto = auto_mesh_for_parts(parts, "mesh2d")
+    return Mesh2D(auto.kx, auto.ky + 1)
+
+
+def _run_repair(traffic, partition, placement_method: str, parts: int, seed: int) -> list[dict]:
+    """The fault-free unit's tile-death ledger: place on the over-provisioned
+    grid, kill tiles, evacuate, then repair at each budget.  The stacked
+    `repair_batch` engine re-runs the largest budget and must reproduce the
+    serial repair bit-for-bit (recorded as `batch_parity`)."""
+    topo = _repair_grid(parts)
+    placement = place(traffic, partition, topo, method=placement_method)
+    num_dead = max(2, topo.num_nodes // 18)
+    faults = sample_tile_faults(topo, num_dead, seed=seed)
+    w = traffic.bytes_matrix
+    rows = []
+    for budget in REPAIR_BUDGETS:
+        _repaired, report = repair_placement(placement, w, faults, budget=budget)
+        rows.append(
+            {
+                "budget": budget,
+                "router_grid": [topo.kx, topo.ky],
+                "num_spares": topo.num_nodes - traffic.num_logical,
+                **report.to_dict(),
+            }
+        )
+    # Cross-check the stacked engine once per unit: re-run the largest budget
+    # through repair_batch (numpy) from the same evacuated seed and require
+    # bit-identical sites vs the serial reference descent.
+    d_deg = degraded_distance_matrix(topo, faults)
+    blocked = np.zeros(topo.num_nodes, dtype=bool)
+    blocked[list(faults.dead_tiles)] = True
+    evac = evacuate_placement(placement, w, faults)
+    batch_sites, _stats = repair_batch(
+        [w], [d_deg], [evac], [blocked], max_steps=max(REPAIR_BUDGETS), backend="numpy"
+    )
+    serial_site, _steps = repair_descend(
+        symmetrize_weights(w), d_deg, evac, blocked, max(REPAIR_BUDGETS)
+    )
+    parity = bool(np.array_equal(batch_sites[0], serial_site))
+    for r in rows:
+        r["batch_parity"] = parity
+    return rows
+
+
+def run_resilience(
+    grid: GridSpec,
+    *,
+    cache: SweepCache | None = None,
+    cache_dir: str | None = None,
+    backend: str = "auto",
+    params: SimParams = SimParams(),
+    noc_params: NocSimParams = NocSimParams(),
+    journal: SweepJournal | None = None,
+    unit_timeout_s: float = 0.0,
+    progress=None,
+) -> ResilienceResult:
+    """Run (or resume) every unit of a faults grid.  `journal` supplies the
+    resume state; completed units are served from it verbatim — the artifact
+    of a resumed run is byte-identical to an uninterrupted one."""
+    if not grid.fault_rates:
+        raise ValueError(f"grid {grid.name!r} has no fault_rates axis")
+    say = progress or (lambda _msg: None)
+    if cache is None:
+        cache = SweepCache(cache_dir)
+    schemes = grid.schemes()
+    if len(schemes) != 2 or schemes[-1] != ("random", "random"):
+        raise ValueError(
+            "faults grids pair exactly (proposed, baseline=random+random)"
+            f" schemes; got {schemes}"
+        )
+    (prop_pt, prop_pl), (base_pt, base_pl) = schemes
+    use_jax = backend in ("auto", "jax")
+    if use_jax:
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            if backend == "jax":  # fail loudly when explicitly requested
+                raise
+            use_jax = False
+            say(f"[faults:{grid.name}] jax unavailable; numpy reference only")
+
+    graphs = table2_workloads(scale=grid.scale, seed=grid.seed, names=grid.workloads)
+    unit_delay = float(os.environ.get("REPRO_FAULTS_UNIT_DELAY", "0") or 0)
+    fail_window = noc_params.windows // 2
+    records: list[dict] = []
+    repair_rows: list[dict] = []
+    parity_max: float | None = None
+
+    for w_name in grid.workloads:
+        g = graphs[w_name]
+        for alg in grid.algorithms:
+            trace = None  # traced lazily: a fully-journaled resume never traces
+            for topo_name in grid.topologies:
+                for parts in grid.parts:
+                    for rate in grid.fault_rates:
+                        uid = f"{w_name}/{alg}/{topo_name}/P{parts}@r{rate:g}"
+                        if journal is not None and journal.has(uid):
+                            rec = journal.get(uid)
+                            records.append(rec["record"])
+                            repair_rows.extend(rec.get("repair", []))
+                            p = rec["record"].get("backend_parity_rel")
+                            if p is not None:
+                                parity_max = max(parity_max or 0.0, p)
+                            say(f"[faults:{grid.name}] {uid} (journaled)")
+                            continue
+                        if trace is None:
+                            trace = cache.trace(
+                                g, alg, max_iterations=TRACE_ITERS.get(alg, DEFAULT_TRACE_ITERS)
+                            )
+                        try:
+                            with unit_timeout(unit_timeout_s):
+                                rec, unit_repair, parity = _run_unit(
+                                    uid,
+                                    g,
+                                    trace,
+                                    cache,
+                                    workload=w_name,
+                                    algorithm=alg,
+                                    topology=topo_name,
+                                    parts=parts,
+                                    rate=rate,
+                                    schemes=((prop_pt, prop_pl), (base_pt, base_pl)),
+                                    params=params,
+                                    noc_params=noc_params,
+                                    fail_window=fail_window,
+                                    use_jax=use_jax,
+                                    seed=grid.seed,
+                                )
+                        except KeyboardInterrupt:
+                            raise
+                        except (UnitTimeout, Exception) as e:  # noqa: BLE001
+                            if journal is not None:
+                                journal.quarantine_unit(uid, e)
+                            say(f"[faults:{grid.name}] {uid} QUARANTINED: {e}")
+                            continue
+                        if parity is not None:
+                            parity_max = max(parity_max or 0.0, parity)
+                        records.append(rec)
+                        repair_rows.extend(unit_repair)
+                        if journal is not None:
+                            journal.record(uid, {"record": rec, "repair": unit_repair})
+                        say(
+                            f"[faults:{grid.name}] {uid} win "
+                            f"{rec['win']:.2f}x ({rec['num_dead_links']} dead links)"
+                        )
+                        if unit_delay > 0:
+                            time.sleep(unit_delay)
+
+    result = ResilienceResult(
+        grid=grid,
+        records=records,
+        repair=repair_rows,
+        quarantined=dict(journal.quarantine) if journal is not None else {},
+        backend="numpy+jax" if (use_jax and parity_max is not None) else "numpy",
+        backend_parity_max_rel=parity_max,
+        fail_window=fail_window,
+        noc_params=noc_params,
+        cache_stats=cache.stats.as_dict(),
+    )
+    if journal is not None:
+        journal.close()
+    return result
+
+
+def _run_unit(
+    uid: str,
+    g,
+    trace,
+    cache: SweepCache,
+    *,
+    workload: str,
+    algorithm: str,
+    topology: str,
+    parts: int,
+    rate: float,
+    schemes,
+    params: SimParams,
+    noc_params: NocSimParams,
+    fail_window: int,
+    use_jax: bool,
+    seed: int,
+) -> tuple[dict, list[dict], float | None]:
+    """One unit: both schemes on one shared degraded fabric."""
+    (prop_pt, prop_pl), (base_pt, base_pl) = schemes
+    topo = auto_mesh_for_parts(parts, topology)
+    fseed = fault_seed(workload, topology, parts, rate)
+    faults = sample_link_faults(topo, rate, seed=fseed)
+
+    traffics, placements = [], []
+    for pt, pl in ((prop_pt, prop_pl), (base_pt, base_pl)):
+        part = cache.partition(g, pt, parts)
+        t = cache.traffic(g, part, trace)
+        traffics.append(t)
+        placements.append(place(t, part, topo, method=pl, seed=seed))
+    faultsets = [faults, faults]
+    schedules = [
+        build_degraded_schedule(
+            t, p, f, noc_params=noc_params, params=params, fail_window=fail_window
+        )
+        for t, p, f in zip(traffics, placements, faultsets)
+    ]
+    iters = trace.num_iterations
+    res_np = degraded_batch(
+        traffics,
+        placements,
+        faultsets,
+        noc_params=noc_params,
+        params=params,
+        num_iterations=iters,
+        backend="numpy",
+        schedules=schedules,
+    )
+    parity = None
+    if use_jax:
+        res_jax = degraded_batch(
+            traffics,
+            placements,
+            faultsets,
+            noc_params=noc_params,
+            params=params,
+            num_iterations=iters,
+            backend="jax",
+            schedules=schedules,
+        )
+        parity = max(
+            abs(j.t_network_contended_s - n.t_network_contended_s)
+            / max(abs(n.t_network_contended_s), 1e-300)
+            for j, n in zip(res_jax, res_np)
+        )
+    prop, base = res_np
+    rec = {
+        "unit_id": uid,
+        "workload": workload,
+        "algorithm": algorithm,
+        "topology": topology,
+        "num_parts": parts,
+        "fault_rate": rate,
+        "fault_seed": fseed,
+        "num_dead_links": faults.num_dead_links(),
+        "num_links": int(schedules[0].schedule.num_links),
+        "num_detoured_flows": int(schedules[0].num_detoured_flows),
+        "detour_stretch": float(schedules[0].detour_stretch),
+        "proposed": {"scheme": f"{prop_pt}+{prop_pl}", **_scheme_record(prop)},
+        "baseline": {"scheme": f"{base_pt}+{base_pl}", **_scheme_record(base)},
+        "win": base.t_network_contended_s / max(prop.t_network_contended_s, 1e-300),
+        "backend_parity_rel": parity,
+    }
+    unit_repair: list[dict] = []
+    if rate == 0.0:
+        part = cache.partition(g, prop_pt, parts)
+        t = cache.traffic(g, part, trace)
+        rows = _run_repair(t, part, prop_pl, parts, fseed + 1)
+        for r in rows:
+            r.update(
+                unit_id=uid, workload=workload, topology=topology, num_parts=parts
+            )
+        unit_repair = rows
+    return rec, unit_repair, parity

@@ -14,13 +14,25 @@ simulator over every config × routing arm — see `repro.nocsim`).
 Completes offline; traces are cached under `--cache-dir` so repeated sweeps
 skip re-tracing.  `python -m repro.experiments.report --check` audits the
 committed report against the committed payloads without running anything.
+
+Interruption and resume: SIGTERM and Ctrl-C are trapped — every open unit
+journal is flushed before the process exits 130.  Grids with a fault axis
+(`--grid faults`/`minifaults`) run through the journaled resilience runner;
+`--resume` reloads `artifacts/journals/<grid>.json` and skips completed
+units (bit-identical artifact, tests/test_crash_resume.py).  Other grids
+resume through the cache: every trace/traffic/shard write is atomic and
+fsync'd (`experiments.cache`), so re-running an interrupted `--grid scale`
+only recomputes what never reached disk.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import signal
 
 from repro.experiments.grid import GRIDS, grid_by_name
+from repro.experiments.journal import SweepJournal, flush_all_journals
 from repro.experiments.report import (
     RENDERABLE_SWEEP_GRIDS,
     save_sweep_artifact,
@@ -30,7 +42,40 @@ from repro.experiments.report import (
 from repro.experiments.sweep import run_sweep
 
 
+def _run_faults_grid(grid, args) -> int:
+    """Faults grids route to the journaled resilience runner instead of
+    run_sweep; the payload lands in `<sweeps-dir>/<grid>.json` like any other
+    secondary sweep artifact (rendered as §Resilience on the next paper run)."""
+    from repro.experiments.resilience import run_resilience
+
+    journal_path = args.journal or os.path.join("artifacts", "journals", f"{grid.name}.json")
+    journal = SweepJournal(journal_path, grid.name, resume=args.resume)
+    result = run_resilience(
+        grid,
+        cache_dir=None if args.no_cache else args.cache_dir,
+        backend=args.backend,
+        journal=journal,
+        unit_timeout_s=args.config_timeout,
+        progress=None if args.quiet else print,
+    )
+    os.makedirs(args.sweeps_dir, exist_ok=True)
+    path = os.path.join(args.sweeps_dir, f"{grid.name}.json")
+    with open(path, "w") as f:
+        json.dump(result.to_dict(), f, indent=1)
+    if not args.quiet:
+        nq = len(result.quarantined)
+        print(
+            f"[sweep:{grid.name}] stored {path} ({len(result.records)} units"
+            + (f", {nq} quarantined" if nq else "")
+            + "); re-run `--grid paper` to render it into EXPERIMENTS.md"
+        )
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
+    # SIGTERM behaves like Ctrl-C: unwind through the KeyboardInterrupt
+    # handler below so open journals reach disk before the process dies.
+    signal.signal(signal.SIGTERM, lambda s, f: (_ for _ in ()).throw(KeyboardInterrupt()))
     ap = argparse.ArgumentParser(
         prog="repro.experiments.run", description="batched experiment sweep"
     )
@@ -76,18 +121,52 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--dryrun-artifacts", default="artifacts/dryrun")
     ap.add_argument("--perf-artifacts", default="artifacts/perf")
+    ap.add_argument(
+        "--resume",
+        action="store_true",
+        help="faults grids: reload the unit journal and skip completed units"
+        " (bit-identical artifact vs an uninterrupted run)",
+    )
+    ap.add_argument(
+        "--journal",
+        default=None,
+        help="unit-journal path for faults grids"
+        " (default artifacts/journals/<grid>.json)",
+    )
+    ap.add_argument(
+        "--config-timeout",
+        type=float,
+        default=0.0,
+        help="per-unit wall-time bound in seconds for faults grids; an"
+        " over-budget unit is quarantined, not fatal (0 = unbounded)",
+    )
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
     grid = grid_by_name(args.grid, scale=args.scale)
-    sweep = run_sweep(
-        grid,
-        cache_dir=None if args.no_cache else args.cache_dir,
-        backend=args.backend,
-        measure_serial=not args.no_serial_check,
-        placement_restarts=args.restarts,
-        progress=None if args.quiet else print,
-    )
+    if grid.fault_rates is not None:
+        try:
+            return _run_faults_grid(grid, args)
+        except KeyboardInterrupt:
+            n = flush_all_journals()
+            print(f"[sweep:{grid.name}] interrupted; flushed {n} journal(s) — resume with --resume")
+            return 130
+    try:
+        sweep = run_sweep(
+            grid,
+            cache_dir=None if args.no_cache else args.cache_dir,
+            backend=args.backend,
+            measure_serial=not args.no_serial_check,
+            placement_restarts=args.restarts,
+            progress=None if args.quiet else print,
+        )
+    except KeyboardInterrupt:
+        # The trace/shard cache is written atomically as the sweep goes, so
+        # an interrupted run resumes by simply re-running: completed stages
+        # hit, only in-flight work recomputes.
+        flush_all_journals()
+        print(f"[sweep:{grid.name}] interrupted; partial cache is on disk — just re-run")
+        return 130
     artifact = None
     if args.grid in RENDERABLE_SWEEP_GRIDS:
         artifact = save_sweep_artifact(sweep, args.sweeps_dir)

@@ -1,0 +1,155 @@
+"""Degraded windowed-NoC arm (repro.faults.degraded): empty-fault runs are
+bit-identical to the pristine `contended_batch`, faulted runs keep numpy↔jax
+parity within the 1e-6 contract, and the degraded schedules behave (detours
+only lengthen routes, derating only inflates post-fail injections)."""
+import numpy as np
+import pytest
+
+from repro.core.noc import Mesh2D, Torus2D
+from repro.core.placement import Placement
+from repro.core.simulator import SimParams
+from repro.core.traffic import TrafficMatrix
+from repro.faults.degraded import (
+    PARITY_RTOL,
+    build_degraded_schedule,
+    degraded_batch,
+)
+from repro.faults.model import FaultSet, sample_link_faults
+from repro.nocsim import NocSimParams, contended_batch
+from repro.nocsim.model import build_schedule
+
+
+def _traffic(parts: int, seed: int) -> TrafficMatrix:
+    rng = np.random.default_rng(seed)
+    n = 4 * parts
+    m = (rng.random((n, n)) < 0.4) * rng.integers(1, 2000, size=(n, n)).astype(np.float64)
+    np.fill_diagonal(m, 0.0)
+    return TrafficMatrix(
+        num_parts=parts,
+        bytes_matrix=m,
+        phase_bytes={"process": float(m.sum()), "reduce": 0.0, "apply": 0.0},
+    )
+
+
+def _setup(topo, seed):
+    parts = topo.num_nodes // 4
+    t = _traffic(parts, seed)
+    rng = np.random.default_rng(seed + 1)
+    site = rng.permutation(topo.num_nodes)[: t.num_logical].astype(np.int64)
+    return t, Placement(topo, site, "test")
+
+
+class TestEmptyFaultBitIdentity:
+    @pytest.mark.parametrize("topo", [Mesh2D(4, 4), Torus2D(4, 4)], ids=["mesh", "torus"])
+    @pytest.mark.parametrize("backend", ["numpy", "jax"])
+    def test_matches_contended_batch(self, topo, backend):
+        if backend == "jax":
+            pytest.importorskip("jax")
+        t, pl = _setup(topo, 0)
+        empty = FaultSet()
+        deg = degraded_batch([t], [pl], [empty], backend=backend)[0]
+        ref = contended_batch([t], [pl], backend=backend)[0]
+        # Two-segment stepping with a no-op boundary == the unchunked run.
+        assert deg.t_network_contended_s == ref.t_network_contended_s
+        assert deg.t_drain_s == ref.t_drain_s
+        assert deg.mean_queue_delay_s == ref.mean_queue_delay_s
+
+    def test_empty_schedule_is_pristine(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 1)
+        ds = build_degraded_schedule(t, pl, FaultSet())
+        base = build_schedule(t, pl)
+        assert np.array_equal(ds.schedule.inj, base.inj)
+        assert np.array_equal(ds.schedule.route_inc, base.route_inc)
+        assert ds.num_detoured_flows == 0 and ds.detour_stretch == 1.0
+        assert ds.redistribution == ()
+
+
+class TestFaultedRuns:
+    @pytest.mark.parametrize("topo", [Mesh2D(4, 4), Torus2D(4, 4)], ids=["mesh", "torus"])
+    def test_numpy_jax_parity_under_faults(self, topo):
+        pytest.importorskip("jax")
+        t, pl = _setup(topo, 2)
+        faults = sample_link_faults(topo, 0.05, seed=9)
+        assert not faults.is_empty
+        res_np = degraded_batch([t], [pl], [faults], backend="numpy")[0]
+        res_jax = degraded_batch([t], [pl], [faults], backend="jax")[0]
+        rel = abs(res_jax.t_network_contended_s - res_np.t_network_contended_s) / abs(
+            res_np.t_network_contended_s
+        )
+        assert rel <= PARITY_RTOL
+
+    def test_faults_never_speed_up_the_network(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 3)
+        ref = contended_batch([t], [pl], backend="numpy")[0]
+        for rate in (0.02, 0.05, 0.1):
+            faults = sample_link_faults(topo, rate, seed=4)
+            deg = degraded_batch([t], [pl], [faults], backend="numpy")[0]
+            assert deg.t_drain_s >= ref.t_drain_s - 1e-18
+
+    def test_degraded_schedule_detours(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 4)
+        faults = sample_link_faults(topo, 0.1, seed=5)
+        ds = build_degraded_schedule(t, pl, faults)
+        base = build_schedule(t, pl)
+        assert ds.num_detoured_flows > 0
+        assert ds.detour_stretch >= 1.0
+        assert np.all(ds.schedule.flow_hops >= base.flow_hops)
+        # pre-fail windows keep the pristine injection program
+        fw = ds.fail_window
+        assert np.array_equal(ds.schedule.inj[:fw], base.inj[:fw])
+        # the pristine reference terms are untouched (win measured against
+        # the fabric the paper costed)
+        assert ds.schedule.cap_bytes == base.cap_bytes
+        assert ds.schedule.peak_load == base.peak_load
+        # no post-fault flow crosses a dead link
+        from repro.nocsim.routes import route_operators
+
+        lid = {k: i for i, k in enumerate(route_operators(topo).link_keys)}
+        for key in faults.dead_links:
+            assert not ds.schedule.route_inc[lid[key]].any()
+
+    def test_derated_links_inflate_post_fail_only(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 5)
+        universe_faults = sample_link_faults(topo, 0.0, seed=0, derate_frac=0.3, derate_gamma=0.5)
+        assert universe_faults.derated_links and not universe_faults.dead_links
+        ds = build_degraded_schedule(t, pl, universe_faults)
+        base = build_schedule(t, pl)
+        fw = ds.fail_window
+        assert np.array_equal(ds.schedule.inj[:fw], base.inj[:fw])
+        assert np.all(ds.schedule.inj[fw:] >= base.inj[fw:] - 1e-12)
+        assert ds.schedule.inj[fw:].sum() > base.inj[fw:].sum()
+
+    def test_fail_window_zero_and_full(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 6)
+        faults = sample_link_faults(topo, 0.05, seed=7)
+        whole = degraded_batch([t], [pl], [faults], backend="numpy", fail_window=0)[0]
+        none = degraded_batch(
+            [t], [pl], [faults], backend="numpy", fail_window=NocSimParams().windows
+        )[0]
+        ref = contended_batch([t], [pl], backend="numpy")[0]
+        # failing before window 0 degrades the whole replay; failing after the
+        # last window leaves the replay itself pristine
+        assert whole.t_drain_s >= none.t_drain_s - 1e-18
+        assert none.t_drain_s == ref.t_drain_s
+
+    def test_mixed_fail_windows_rejected(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 7)
+        f = sample_link_faults(topo, 0.05, seed=8)
+        s1 = build_degraded_schedule(t, pl, f, fail_window=4)
+        s2 = build_degraded_schedule(t, pl, f, fail_window=8)
+        with pytest.raises(ValueError, match="one fail_window"):
+            degraded_batch([t, t], [pl, pl], [f, f], schedules=[s1, s2])
+
+    def test_adaptive_routing_rejected(self):
+        topo = Mesh2D(4, 4)
+        t, pl = _setup(topo, 8)
+        with pytest.raises(ValueError, match="dimension-ordered"):
+            build_degraded_schedule(
+                t, pl, FaultSet(), noc_params=NocSimParams(routing="adaptive2")
+            )

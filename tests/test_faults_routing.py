@@ -1,0 +1,188 @@
+"""Fault model + detour routing contract (repro.faults.model / .routing):
+routes never traverse dead links, reduce bit-identically to the pristine
+dimension-ordered routes when the fault set is empty, and are never shorter
+than the fault-free distance — across all four exactly-routed topologies."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
+from repro.faults.model import FaultSet, sample_link_faults, sample_tile_faults
+from repro.faults.routing import (
+    degraded_distance_matrix,
+    effective_dead_links,
+    route_links_faulty,
+    surviving_link_keys,
+)
+from repro.nocsim.routes import route_operators
+
+ALL_TOPOLOGIES = (
+    Mesh2D(4, 5),
+    FlattenedButterfly(4, 4),
+    Torus2D(4, 4),
+    Torus2D(5, 3),
+    Torus3D(3, 3, 2),
+)
+_IDS = [f"{t.name}{t.num_nodes}" for t in ALL_TOPOLOGIES]
+
+
+class TestFaultSet:
+    def test_empty_and_describe(self):
+        f = FaultSet()
+        assert f.is_empty and f.num_dead_links() == 0
+        assert "0 dead links" in f.describe()
+
+    def test_derate_validation(self):
+        with pytest.raises(ValueError):
+            FaultSet(derated_links=(((0, 0, 0, 1), 0.0),))
+        with pytest.raises(ValueError):
+            FaultSet(derated_links=(((0, 0, 0, 1), 1.5),))
+        # gamma == 1 entries are dropped (the link is not actually derated)
+        assert FaultSet(derated_links=(((0, 0, 0, 1), 1.0),)).is_empty
+
+    def test_hashable(self):
+        a = FaultSet(dead_links=frozenset({(0, 0, 0, 1)}))
+        b = FaultSet(dead_links={(0, 0, 0, 1)})
+        assert hash(a) == hash(b) and a == b
+
+
+class TestSamplers:
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_IDS)
+    def test_link_sampler_deterministic_and_paired(self, topo):
+        f1 = sample_link_faults(topo, 0.1, seed=3)
+        f2 = sample_link_faults(topo, 0.1, seed=3)
+        assert f1 == f2
+        assert f1.dead_links
+        ndim = topo.coords().shape[1]
+        for k in f1.dead_links:  # cables die whole: both directions together
+            assert k[ndim:] + k[:ndim] in f1.dead_links
+        assert sample_link_faults(topo, 0.0, seed=3).is_empty
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_IDS)
+    def test_samplers_preserve_connectivity(self, topo):
+        # High rates must saturate at the connectivity limit, not disconnect:
+        # the degraded distance matrix raises on any unreachable live pair.
+        f = sample_link_faults(topo, 0.3, seed=11)
+        degraded_distance_matrix(topo, f)
+        ft = sample_tile_faults(topo, 3, seed=11)
+        assert len(ft.dead_tiles) == 3
+        degraded_distance_matrix(topo, ft)
+
+    def test_tile_sampler_respects_protected(self):
+        topo = Mesh2D(4, 5)
+        ft = sample_tile_faults(topo, 4, seed=0, protected=(0, 1, 2))
+        assert not ft.dead_tiles & {0, 1, 2}
+
+    def test_derate_sampler(self):
+        topo = Mesh2D(4, 5)
+        f = sample_link_faults(topo, 0.05, seed=2, derate_frac=0.2, derate_gamma=0.5)
+        assert f.derated_links
+        for k, g in f.derated_links:
+            assert g == 0.5 and k not in f.dead_links
+
+
+class TestDetourRouting:
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_IDS)
+    def test_empty_faultset_bit_identical(self, topo):
+        empty = FaultSet()
+        coords = topo.coords()
+        for i in range(topo.num_nodes):
+            for j in range(topo.num_nodes):
+                assert route_links_faulty(
+                    topo, tuple(coords[i]), tuple(coords[j]), empty
+                ) == topo.route_links(tuple(coords[i]), tuple(coords[j]))
+
+    @settings(max_examples=40)
+    @given(
+        ti=st.integers(min_value=0, max_value=len(ALL_TOPOLOGIES) - 1),
+        seed=st.integers(min_value=0, max_value=10_000),
+        rate=st.sampled_from([0.02, 0.05, 0.1, 0.2]),
+    )
+    def test_detours_avoid_dead_links_and_lower_bound(self, ti, seed, rate):
+        topo = ALL_TOPOLOGIES[ti]
+        faults = sample_link_faults(topo, rate, seed=seed)
+        dead = effective_dead_links(topo, faults)
+        coords = topo.coords()
+        d0 = topo.distance_matrix()
+        universe = set(route_operators(topo).link_keys)
+        rng = np.random.default_rng(seed)
+        for _ in range(12):
+            i, j = rng.integers(topo.num_nodes, size=2)
+            route = route_links_faulty(topo, tuple(coords[i]), tuple(coords[j]), faults)
+            assert not any(k in dead for k in route)
+            assert all(k in universe for k in route)  # detours stay in link-id space
+            assert len(route) >= d0[i, j]
+            # ...and the route actually connects i to j, link by link.
+            pos = tuple(coords[i])
+            ndim = len(pos)
+            for k in route:
+                assert k[:ndim] == pos
+                pos = k[ndim:]
+            assert pos == tuple(coords[j])
+
+    @settings(max_examples=20)
+    @given(
+        ti=st.integers(min_value=0, max_value=len(ALL_TOPOLOGIES) - 1),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    def test_tile_faults_route_around_dead_tiles(self, ti, seed):
+        topo = ALL_TOPOLOGIES[ti]
+        faults = sample_tile_faults(topo, 2, seed=seed)
+        coords = topo.coords()
+        dead_coords = {tuple(coords[t]) for t in faults.dead_tiles}
+        alive = [i for i in range(topo.num_nodes) if i not in faults.dead_tiles]
+        rng = np.random.default_rng(seed)
+        ndim = coords.shape[1]
+        for _ in range(8):
+            i, j = rng.choice(alive, size=2)
+            route = route_links_faulty(topo, tuple(coords[i]), tuple(coords[j]), faults)
+            for k in route:
+                assert k[:ndim] not in dead_coords and k[ndim:] not in dead_coords
+
+    def test_dead_endpoint_raises(self):
+        topo = Mesh2D(4, 5)
+        faults = FaultSet(dead_tiles=frozenset({0}))
+        coords = topo.coords()
+        with pytest.raises(ValueError, match="dead tile"):
+            route_links_faulty(topo, tuple(coords[0]), tuple(coords[5]), faults)
+
+    def test_unreachable_raises(self):
+        # Kill every link touching node 0 by hand (the samplers never would).
+        topo = Mesh2D(3, 3)
+        universe = route_operators(topo).link_keys
+        c0 = tuple(topo.coords()[0])
+        dead = {k for k in universe if k[:2] == c0 or k[2:] == c0}
+        faults = FaultSet(dead_links=frozenset(dead))
+        with pytest.raises(ValueError, match="no surviving route"):
+            route_links_faulty(topo, c0, tuple(topo.coords()[4]), faults)
+
+
+class TestDegradedDistances:
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_IDS)
+    def test_empty_equals_pristine(self, topo):
+        assert np.array_equal(
+            degraded_distance_matrix(topo, FaultSet()),
+            topo.distance_matrix().astype(np.float64),
+        )
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=_IDS)
+    def test_degraded_never_shorter(self, topo):
+        faults = sample_link_faults(topo, 0.1, seed=5)
+        d = degraded_distance_matrix(topo, faults)
+        assert np.all(d >= topo.distance_matrix() - 1e-12)
+        assert np.all(np.diag(d) == 0.0)
+
+    def test_dead_tile_rows_are_zero_not_inf(self):
+        topo = Mesh2D(4, 5)
+        faults = sample_tile_faults(topo, 2, seed=1)
+        d = degraded_distance_matrix(topo, faults)
+        dead = sorted(faults.dead_tiles)
+        assert np.all(d[dead, :] == 0.0) and np.all(d[:, dead] == 0.0)
+        assert np.isfinite(d).all()  # 0·inf NaNs can never enter w @ d
+
+    def test_surviving_link_keys(self):
+        topo = Mesh2D(4, 5)
+        faults = sample_link_faults(topo, 0.1, seed=5)
+        keys = surviving_link_keys(topo, faults)
+        assert set(keys).isdisjoint(faults.dead_links)
+        assert len(keys) == len(route_operators(topo).link_keys) - len(faults.dead_links)

@@ -90,6 +90,64 @@ def run():
         )
         emit(f"contention/win/{routing}", 0.0, f"contended_win={win:.2f}x")
 
+    # closed-loop credit arm (repro.nocsim.credit): win retention per buffer
+    # depth, the infinite-credit == open-loop identity, and the credit
+    # stepper's own timing next to the open rows above.
+    open_results = {}
+    for scheme, (traffic, pl, rec) in cells.items():
+        open_results[scheme] = contended_batch(
+            [traffic], [pl], noc_params=NocSimParams(routing="dor"),
+            num_iterations=rec.num_iterations, backend="numpy",
+        )[0]
+    open_win = (
+        open_results["baseline"].t_network_contended_s
+        / open_results["proposed"].t_network_contended_s
+    )
+    for depth in (0.5, 1.0, 4.0):
+        params = NocSimParams(
+            routing="dor", flow_control="credit", buffer_depth=depth
+        )
+        results = {}
+        for scheme, (traffic, pl, rec) in cells.items():
+            (res,), us = timed(
+                contended_batch,
+                [traffic],
+                [pl],
+                noc_params=params,
+                num_iterations=rec.num_iterations,
+                backend="numpy",
+            )
+            results[scheme] = res
+            emit(
+                f"contention/credit/{scheme}/d{depth:g}",
+                us,
+                f"t_contended_s={res.t_network_contended_s:.3e};"
+                f"p99_s={res.p99_latency_s:.3e}",
+            )
+        win = (
+            results["baseline"].t_network_contended_s
+            / results["proposed"].t_network_contended_s
+        )
+        emit(
+            f"contention/credit/win/d{depth:g}",
+            0.0,
+            f"contended_win={win:.2f}x;retained={win / open_win:.3f}",
+        )
+    inf_params = NocSimParams(
+        routing="dor", flow_control="credit", buffer_depth=float("inf")
+    )
+    inf_max = 0.0
+    for scheme, (traffic, pl, rec) in cells.items():
+        res = contended_batch(
+            [traffic], [pl], noc_params=inf_params,
+            num_iterations=rec.num_iterations, backend="numpy",
+        )[0]
+        inf_max = max(
+            inf_max,
+            abs(res.t_network_contended_s - open_results[scheme].t_network_contended_s),
+        )
+    emit("contention/credit/inf_identity", 0.0, f"max_abs_vs_open={inf_max:g}")
+
     # backend timing parity row: the stacked jax scan vs the numpy loop over
     # BOTH schemes at once (the sweep-shaped call pattern).
     traffics = [cells["baseline"][0], cells["proposed"][0]]
@@ -111,6 +169,23 @@ def run():
             "contention/backend/jax_scan",
             us_jx,
             f"numpy_us={us_np:.1f};parity_max_rel={parity:.2e}",
+        )
+        cparams = NocSimParams(flow_control="credit", buffer_depth=1.0)
+        cres_np, cus_np = timed(
+            contended_batch, traffics, placements, noc_params=cparams, backend="numpy"
+        )
+        cres_jx, cus_jx = timed(
+            contended_batch, traffics, placements, noc_params=cparams, backend="jax"
+        )
+        cparity = max(
+            abs(a.t_network_contended_s - b.t_network_contended_s)
+            / max(abs(a.t_network_contended_s), 1e-300)
+            for a, b in zip(cres_np, cres_jx)
+        )
+        emit(
+            "contention/backend/credit_jax_scan",
+            cus_jx,
+            f"numpy_us={cus_np:.1f};parity_max_rel={cparity:.2e}",
         )
     except ImportError:
         emit("contention/backend/jax_scan", 0.0, f"numpy_us={us_np:.1f};jax=absent")

@@ -45,7 +45,7 @@ import math
 
 import numpy as np
 
-from repro.core.noc import FlattenedButterfly, Mesh2D, Topology, Torus2D
+from repro.core.noc import FlattenedButterfly, Mesh2D, Topology, Torus2D, Torus3D
 from repro.core.partition import Partition
 from repro.core.traffic import EPROP, ET, VPROP, VTEMP, TrafficMatrix
 
@@ -112,8 +112,19 @@ class Placement:
 
 
 def auto_mesh_for_parts(num_parts: int, topology: str = "mesh2d") -> Topology:
-    """Smallest near-square mesh with ≥ 4·P routers (one per shard)."""
+    """Smallest near-square mesh (near-cubic torus3d) with ≥ 4·P routers
+    (one per shard)."""
     n = 4 * num_parts
+    if topology == "torus3d":
+        # Near-cubic factorization n = kx·ky·kz: kx the largest divisor
+        # ≤ n^(1/3), then ky·kz near-square on the remainder (e.g. 64 →
+        # 4×4×4, 16 → 2×2×4).
+        kx = max(k for k in range(1, int(round(n ** (1 / 3))) + 1) if n % k == 0)
+        rest = n // kx
+        ky = int(math.isqrt(rest))
+        while rest % ky:
+            ky -= 1
+        return Torus3D(kx, ky, rest // ky)
     kx = int(math.isqrt(n))
     while n % kx:
         kx -= 1

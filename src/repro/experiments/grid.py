@@ -29,7 +29,7 @@ class SweepConfig:
     algorithm: str  # bfs | sssp | pagerank
     partitioner: str  # core.partition.PARTITIONERS key
     placement: str  # core.placement.place method (auto|random|quad|greedy|...)
-    topology: str  # mesh2d | fbutterfly | torus2d (exact wraparound routing)
+    topology: str  # mesh2d | fbutterfly | torus2d | torus3d (exact routing)
     num_parts: int  # engines; NoC has 4·num_parts routers
     scale: float = PAPER_SCALE
     seed: int = 0
@@ -88,6 +88,14 @@ class GridSpec:
     # the runner pairs the proposed and baseline schemes itself, one shared
     # FaultSet per (workload, topology, parts, rate) unit.
     fault_rates: tuple[float, ...] | None = None
+    # Backpressure axis (`--grid backpressure`): per-link buffer depths (in
+    # units of one window's service) for the closed-loop credit arm
+    # (repro.nocsim.credit).  When set, the contention pass adds one credit
+    # record set per depth per routing arm plus the infinite-credit
+    # convergence audit (credit @ depth=inf must reproduce the open-loop
+    # records bit-identically on numpy, ≤1e-6 on jax — gated by
+    # `report --check`).  Requires `contention=True`.
+    buffer_depths: tuple[float, ...] | None = None
 
     def schemes(self) -> tuple[tuple[str, str], ...]:
         if self.pair_schemes:
@@ -201,18 +209,35 @@ GRIDS: dict[str, GridSpec] = {
     #     powerlaw+greedy's to show construction beats search for free.
     #   random+random   — the paper baseline.
     # Windowed NoC contention (repro.nocsim): proposed scheme vs baseline on
-    # mesh2d AND torus2d with the phase-resolved injection profile, both
-    # routing arms (dimension-ordered vs minimal-adaptive two-choice) —
-    # quantifies the hotspot-formation / queueing effects the analytic
-    # serialization term misses and how much of the paper's win survives
-    # smarter routing (EXPERIMENTS.md §Contention).
+    # mesh2d, torus2d AND the 3-D pod fabric (torus3d, 4×4×4 routers at 16
+    # engines) with the phase-resolved injection profile, both routing arms
+    # (dimension-ordered vs minimal-adaptive two-choice) — quantifies the
+    # hotspot-formation / queueing effects the analytic serialization term
+    # misses and how much of the paper's win survives smarter routing
+    # (EXPERIMENTS.md §Contention).
     "contention": GridSpec(
         name="contention",
         workloads=("amazon", "soc-pokec"),
         algorithms=("pagerank", "bfs"),
-        topologies=("mesh2d", "torus2d"),
+        topologies=("mesh2d", "torus2d", "torus3d"),
         parts=(16,),
         contention=True,
+        **_PROPOSED_VS_BASELINE,
+    ),
+    # Closed-loop backpressure (`--grid backpressure`): the credit arm
+    # (repro.nocsim.credit) over a per-link buffer-depth axis on the
+    # §Contention cells, all three torus/mesh fabrics incl. the 3-D pod.
+    # §Backpressure reports how much of the open-loop contended win the
+    # proposed scheme retains once finite buffers gate injection (tree
+    # saturation / head-of-line blocking), per depth and routing arm.
+    "backpressure": GridSpec(
+        name="backpressure",
+        workloads=("amazon", "soc-pokec"),
+        algorithms=("pagerank",),
+        topologies=("mesh2d", "torus2d", "torus3d"),
+        parts=(16,),
+        contention=True,
+        buffer_depths=(0.5, 1.0, 2.0, 4.0, 8.0),
         **_PROPOSED_VS_BASELINE,
     ),
     # Published-workload-size scaling (`--grid scale`): the sparse-first
@@ -264,6 +289,22 @@ GRIDS: dict[str, GridSpec] = {
         scale=0.001,
         contention=True,
         fault_rates=(0.0, 0.05),
+        pair_schemes=True,
+    ),
+    # CI-sized backpressure grid (scripts/verify.sh): the minifaults cells
+    # with the credit arm at two depths — asserts in CI that the closed-loop
+    # stepper ran, held parity, and passed the infinite-credit audit.
+    "minicredit": GridSpec(
+        name="minicredit",
+        workloads=("amazon",),
+        algorithms=("bfs",),
+        partitioners=("powerlaw", "random"),
+        placements=("quad", "random"),
+        topologies=("mesh2d",),
+        parts=(4,),
+        scale=0.001,
+        contention=True,
+        buffer_depths=(1.0, 4.0),
         pair_schemes=True,
     ),
     "torus": GridSpec(

@@ -342,13 +342,18 @@ def run_sweep(
 
         t0 = time.perf_counter()
         contention = contention_sweep_payload(
-            configs, traffics, placements, num_iterations=iters, params=params
+            configs,
+            traffics,
+            placements,
+            num_iterations=iters,
+            params=params,
+            buffer_depths=grid.buffer_depths,
         )
         t_contention = time.perf_counter() - t0
         parity = contention.get("backend_parity_max_rel")
         say(
             f"[sweep:{grid.name}] contention: {len(contention['records'])} "
-            f"(config × routing) records, backends {contention['backends']}, "
+            f"(config × arm) records, backends {contention['backends']}, "
             f"numpy↔jax parity {parity if parity is None else f'{parity:.2e}'}"
         )
 

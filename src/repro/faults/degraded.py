@@ -1,8 +1,10 @@
 """The degraded windowed-NoC arm: mid-replay link failures in both backends.
 
 One degraded replay is two segments of the existing window recursion
-(`nocsim.batch._step_numpy` / `_step_jax` — the steppers are reused verbatim,
-so the fault arm cannot drift from the pristine arm's semantics):
+(`nocsim.batch.open_step` under the shared `run_windows` carry driver — the
+steppers are reused verbatim, so the fault arm cannot drift from the
+pristine arm's semantics; with `flow_control="credit"` the two segments run
+`nocsim.credit` instead, same boundary protocol, credit state carried):
 
   segment 1  windows [0, fail_window)   — pristine dimension-ordered routes;
   boundary   the backlog stranded on each newly-dead link is redistributed
@@ -24,8 +26,9 @@ and `t_drain` measure fault-induced slowdown against the fabric the paper
 measured — the "win retention vs fault rate" headline.  With an empty
 `FaultSet` the detour routes equal the pristine routes, the redistribution
 is a no-op, and the two-segment chunked stepping is bit-identical to the
-unchunked pristine run (`_step_chunked`'s property) — so `degraded_batch`
-reproduces `contended_batch` bit-for-bit (tested).
+unchunked pristine run (`run_windows`'s property) — so `degraded_batch`
+reproduces `contended_batch` bit-for-bit (tested, on BOTH flow-control
+arms).
 """
 from __future__ import annotations
 
@@ -38,7 +41,7 @@ from repro.core.simulator import SimParams
 from repro.core.traffic import TrafficMatrix
 from repro.faults.model import FaultSet
 from repro.faults.routing import effective_dead_links, route_links_faulty
-from repro.nocsim.batch import PARITY_RTOL, _step_jax, _step_numpy
+from repro.nocsim.batch import PARITY_RTOL, open_step, run_windows
 from repro.nocsim.model import (
     ConfigSchedule,
     NocSimParams,
@@ -67,6 +70,8 @@ class DegradedSchedule:
     redistribution: tuple[tuple[int, tuple[int, ...], tuple[float, ...]], ...]
     num_detoured_flows: int
     detour_stretch: float  # byte-weighted mean (detour hops / pristine hops)
+    route_inc_pre: np.ndarray  # pristine (L, F) incidence (segment-1 credit)
+    gamma: np.ndarray  # (L,) derate factors (1 everywhere pre-fault)
 
 
 def _link_id_map(link_keys: tuple) -> dict:
@@ -175,6 +180,8 @@ def build_degraded_schedule(
         redistribution=tuple(redistribution),
         num_detoured_flows=detoured,
         detour_stretch=float(stretch),
+        route_inc_pre=base.route_inc,
+        gamma=gamma,
     )
 
 
@@ -233,16 +240,57 @@ def degraded_batch(
         sch = ds.schedule
         if sch.cap_bytes > 0.0:
             inj[:, c, : sch.inj.shape[1]] = sch.inj / sch.cap_bytes
-    step = _step_jax if backend == "jax" else _step_numpy
     plans = [list(d.redistribution) for d in schedules]
-    if 0 < fail_w < w:
-        s1, b1 = step(inj[:fail_w], None)
-        carry = _apply_redistribution(b1[-1], plans)
-        s2, b2 = step(inj[fail_w:], carry)
-        serviced_tl = np.concatenate([s1, s2])
-        backlog_tl = np.concatenate([b1, b2])
+    if noc_params.flow_control == "credit":
+        # Closed-loop composition: the same two-segment structure, with the
+        # credit state (src, buf) carried across the failure boundary.  The
+        # pre segment runs on the pristine incidence; the post segment on
+        # the detour incidence with derated links scaled by 1/γ (a derated
+        # link's buffer fills 1/γ faster in normalised units, matching the
+        # 1/γ-inflated injections), which preserves the infinite-credit
+        # arrivals identity per segment.  At the boundary the source-held
+        # state passes through unchanged (held bytes re-bid on the new
+        # routes via the post incidence) and the buffered bytes stranded on
+        # dead links move to their detour links — the same shared-float64
+        # `_apply_redistribution` as the open arm, applied to `buf`.
+        from repro.nocsim.credit import build_credit_program, run_credit
+
+        cfg_schedules = [d.schedule for d in schedules]
+        inc_pre = [d.route_inc_pre for d in schedules]
+        inc_post = [d.schedule.route_inc / d.gamma[:, None] for d in schedules]
+        prog_pre = build_credit_program(
+            cfg_schedules, noc_params, inc_override=inc_pre, inj_override=inj
+        )
+        prog_post = build_credit_program(
+            cfg_schedules, noc_params, inc_override=inc_post, inj_override=inj
+        )
+        if 0 < fail_w < w:
+            p1 = dataclasses.replace(
+                prog_pre, inj=inj[:fail_w], offered=prog_pre.offered[:fail_w]
+            )
+            p2 = dataclasses.replace(
+                prog_post, inj=inj[fail_w:], offered=prog_post.offered[fail_w:]
+            )
+            tl1, (src, buf) = run_credit(p1, backend=backend)
+            buf = _apply_redistribution(buf, plans)
+            tl2, _ = run_credit(p2, backend=backend, carry=(src, buf))
+            serviced_tl = np.concatenate([tl1.serviced, tl2.serviced])
+            backlog_tl = np.concatenate([tl1.eff_backlog, tl2.eff_backlog])
+        else:
+            tl, _ = run_credit(
+                prog_pre if fail_w == w else prog_post, backend=backend
+            )
+            serviced_tl, backlog_tl = tl.serviced, tl.eff_backlog
     else:
-        serviced_tl, backlog_tl = step(inj, None)
+        step = open_step(backend)
+        if 0 < fail_w < w:
+            (s1, b1), carry = run_windows(step, (inj[:fail_w],), None)
+            carry = _apply_redistribution(carry, plans)
+            (s2, b2), _ = run_windows(step, (inj[fail_w:],), carry)
+            serviced_tl = np.concatenate([s1, s2])
+            backlog_tl = np.concatenate([b1, b2])
+        else:
+            (serviced_tl, backlog_tl), _ = run_windows(step, (inj,), None)
     results = []
     for c, ds in enumerate(schedules):
         sch = ds.schedule

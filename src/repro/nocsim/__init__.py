@@ -20,10 +20,26 @@ assignment), `model` (window semantics, phase decomposition, the serial
 numpy reference `simulate_contended`), `batch` (the stacked backend — one
 `jax.lax.scan` over windows simulating ALL sweep configs in one program,
 with a vectorized numpy reference stepper; same parity discipline as
-`experiments.placement_batch`).
+`experiments.placement_batch`; plus `run_windows`, the window-chunk carry
+driver every arm shares), `credit` (the closed-loop credit/backpressure
+arm: finite per-link buffers, source-held backlog, admission gated on
+downstream credits; `buffer_depth=inf` reproduces the open-loop arm
+bit-for-bit on numpy — the tested convergence contract).
 """
 from repro.nocsim.model import NocSimParams, NocSimResult, simulate_contended
-from repro.nocsim.batch import contended_batch, contention_sweep_payload
+from repro.nocsim.batch import (
+    contended_batch,
+    contention_sweep_payload,
+    open_step,
+    run_windows,
+)
+from repro.nocsim.credit import (
+    CreditProgram,
+    CreditTimelines,
+    build_credit_program,
+    credit_step,
+    run_credit,
+)
 
 __all__ = [
     "NocSimParams",
@@ -31,4 +47,11 @@ __all__ = [
     "simulate_contended",
     "contended_batch",
     "contention_sweep_payload",
+    "open_step",
+    "run_windows",
+    "CreditProgram",
+    "CreditTimelines",
+    "build_credit_program",
+    "credit_step",
+    "run_credit",
 ]

@@ -44,7 +44,13 @@ from repro.nocsim.model import (
 )
 from repro.nocsim.routes import ROUTING_POLICIES
 
-__all__ = ["contended_batch", "contention_sweep_payload", "PARITY_RTOL"]
+__all__ = [
+    "contended_batch",
+    "contention_sweep_payload",
+    "open_step",
+    "run_windows",
+    "PARITY_RTOL",
+]
 
 # Default window-chunk size when a caller asks for streaming without picking
 # one: big enough to amortise dispatch, small enough to bound the stepper's
@@ -133,25 +139,49 @@ def _step_jax(
     return np.asarray(serviced, np.float64), np.asarray(backlog, np.float64)
 
 
-def _step_chunked(step, inj: np.ndarray, window_chunk: int | None):
-    """Run the window recursion in chunks of `window_chunk` windows, carrying
-    the backlog state between chunks.  The recursion is sequential in the
-    window axis, so the chunk boundary state equals the state the unchunked
-    run has at that window — the chunked timelines are bit-identical on both
-    backends for ANY chunk size (property-tested).  The stepper's working set
-    (and the jax transfer/scan extent) is bounded at O(chunk·C·L)."""
+def _open_step_numpy(xs, carry):
+    """`_step_numpy` in the `run_windows` step protocol (carry = backlog)."""
+    s_tl, b_tl = _step_numpy(xs[0], carry)
+    return (s_tl, b_tl), b_tl[-1]
+
+
+def _open_step_jax(xs, carry):
+    s_tl, b_tl = _step_jax(xs[0], carry)
+    return (s_tl, b_tl), b_tl[-1]
+
+
+def open_step(backend: str):
+    """The open-loop stepper for one backend, in `run_windows` protocol."""
+    return _open_step_jax if backend == "jax" else _open_step_numpy
+
+
+def run_windows(step, xs: tuple, carry, *, window_chunk: int | None = None):
+    """THE window-carry driver, shared by every stepper arm (open, credit,
+    degraded segments): run `step` over the window axis in chunks of
+    `window_chunk`, threading the arm's carry state between chunks.
+
+    `step(xs_chunk, carry) -> (timelines, carry)` where `xs_chunk` is each
+    input sliced along axis 0 and `timelines` is a tuple of window-axis
+    arrays; `carry=None` means the arm's fresh initial state.  Every
+    recursion here is strictly sequential over windows, so the chunk
+    boundary state equals the unchunked run's state at that window and the
+    chunked timelines are bit-identical on both backends for ANY chunk size
+    (regression-tested at the adversarial sizes 1, W−1, W).  Because the
+    arms share this one code path, `window_chunk=` cannot diverge between
+    them.  The stepper's working set (and the jax transfer/scan extent) is
+    bounded at O(chunk · state)."""
+    w = xs[0].shape[0]
     if window_chunk is None:
-        return step(inj, None)
-    w = inj.shape[0]
+        return step(tuple(xs), carry)
     chunk = max(1, int(window_chunk))
-    serviced_parts, backlog_parts = [], []
-    carry: np.ndarray | None = None
+    parts = []
     for start in range(0, w, chunk):
-        s_tl, b_tl = step(inj[start : min(start + chunk, w)], carry)
-        serviced_parts.append(s_tl)
-        backlog_parts.append(b_tl)
-        carry = b_tl[-1]
-    return np.concatenate(serviced_parts), np.concatenate(backlog_parts)
+        tls, carry = step(tuple(x[start : start + chunk] for x in xs), carry)
+        parts.append(tls)
+    stitched = tuple(
+        np.concatenate([p[i] for p in parts]) for i in range(len(parts[0]))
+    )
+    return stitched, carry
 
 
 def contended_batch(
@@ -170,9 +200,13 @@ def contended_batch(
     stacked recursion regardless of topology (the link axis is padded to
     the batch maximum).  `schedules` lets a caller running several backends
     over the same configs (the parity measurement) build them once.
-    `window_chunk` streams the recursion over window chunks with the backlog
-    carried between them — bit-identical to the unchunked run on both
-    backends for any chunk size (see `_step_chunked`)."""
+    `window_chunk` streams the recursion over window chunks with the arm's
+    carry state threaded between them — bit-identical to the unchunked run
+    on both backends for any chunk size (see `run_windows`).  With
+    `noc_params.flow_control == "credit"` the closed-loop stepper
+    (`nocsim.credit`) runs instead of the open-loop recursion; its
+    effective backlog (per-link buffer + at-source holdback mapped over the
+    route) feeds the same `assemble_result` post-processing."""
     if len(traffics) != len(placements):
         raise ValueError("traffics and placements must pair up")
     n_cfg = len(traffics)
@@ -185,14 +219,22 @@ def contended_batch(
             build_schedule(t, p, noc_params=noc_params, params=params)
             for t, p in zip(traffics, placements)
         ]
-    w = noc_params.windows
-    l_max = max(s.inj.shape[1] for s in schedules)
-    inj = np.zeros((w, n_cfg, l_max), dtype=np.float64)
-    for c, s in enumerate(schedules):
-        if s.cap_bytes > 0.0:
-            inj[:, c, : s.inj.shape[1]] = s.inj / s.cap_bytes
-    step = _step_jax if backend == "jax" else _step_numpy
-    serviced_tl, backlog_tl = _step_chunked(step, inj, window_chunk)
+    if noc_params.flow_control == "credit":
+        from repro.nocsim.credit import build_credit_program, run_credit
+
+        program = build_credit_program(schedules, noc_params)
+        tl, _ = run_credit(program, backend=backend, window_chunk=window_chunk)
+        serviced_tl, backlog_tl = tl.serviced, tl.eff_backlog
+    else:
+        w = noc_params.windows
+        l_max = max(s.inj.shape[1] for s in schedules)
+        inj = np.zeros((w, n_cfg, l_max), dtype=np.float64)
+        for c, s in enumerate(schedules):
+            if s.cap_bytes > 0.0:
+                inj[:, c, : s.inj.shape[1]] = s.inj / s.cap_bytes
+        serviced_tl, backlog_tl = run_windows(
+            open_step(backend), (inj,), None, window_chunk=window_chunk
+        )[0]
     results = []
     for c, s in enumerate(schedules):
         l = s.inj.shape[1]
@@ -220,6 +262,7 @@ def contention_sweep_payload(
     params: SimParams = SimParams(),
     noc_params: NocSimParams = NocSimParams(),
     run_parity: bool = True,
+    buffer_depths: tuple[float, ...] | None = None,
 ) -> dict:
     """The `--grid contention` sweep pass: every config × every routing arm
     through the windowed simulator, on BOTH backends when jax is available.
@@ -230,13 +273,24 @@ def contention_sweep_payload(
     relative |numpy − jax| on the contended T_network — committed into the
     sweep artifact and gated ≤ `PARITY_RTOL` by the report freshness audit.
     `configs` are `SweepConfig`-like objects (need `.key` plus the axis
-    fields); records join back to sweep records on `key`."""
+    fields); records join back to sweep records on `key`.
+
+    `buffer_depths` adds the closed-loop credit arm (`nocsim.credit`): per
+    routing arm, one extra record set per depth (tagged
+    `flow_control="credit"` / `buffer_depth`), folded into the same parity
+    measurement — plus the infinite-credit convergence audit: a
+    `buffer_depth=inf` credit run must reproduce the open-loop records
+    bit-identically on numpy (`credit_inf_numpy_max_abs == 0.0`) and within
+    the parity contract on jax (`credit_inf_jax_max_rel ≤ PARITY_RTOL`),
+    both committed into the artifact and gated by `report --check`."""
     import dataclasses as _dc
 
     n_cfg = len(traffics)
     iters = np.broadcast_to(np.asarray(num_iterations, dtype=np.int64), (n_cfg,))
     records: list[dict] = []
     parity_max = 0.0
+    inf_np_max_abs = 0.0 if buffer_depths is not None else None
+    inf_jax_max_rel = None
     timings: dict[str, float] = {}
     backends = ["numpy"]
     have_jax = False
@@ -248,12 +302,9 @@ def contention_sweep_payload(
             backends.append("jax")
         except ImportError:  # pragma: no cover
             pass
-    for routing in ROUTING_POLICIES:
-        arm_params = _dc.replace(noc_params, routing=routing)
-        schedules = [
-            build_schedule(t, p, noc_params=arm_params, params=params)
-            for t, p in zip(traffics, placements)
-        ]
+
+    def run_arm(arm_params, schedules, tag):
+        nonlocal parity_max
         t0 = time.perf_counter()
         ref = contended_batch(
             traffics,
@@ -264,7 +315,8 @@ def contention_sweep_payload(
             backend="numpy",
             schedules=schedules,
         )
-        timings[f"{routing}_numpy_s"] = time.perf_counter() - t0
+        timings[f"{tag}_numpy_s"] = time.perf_counter() - t0
+        acc = None
         if have_jax:
             t0 = time.perf_counter()
             acc = contended_batch(
@@ -276,21 +328,63 @@ def contention_sweep_payload(
                 backend="jax",
                 schedules=schedules,
             )
-            timings[f"{routing}_jax_s"] = time.perf_counter() - t0
+            timings[f"{tag}_jax_s"] = time.perf_counter() - t0
             for r_np, r_jx in zip(ref, acc):
                 denom = max(abs(r_np.t_network_contended_s), 1e-300)
                 parity_max = max(
                     parity_max,
                     abs(r_np.t_network_contended_s - r_jx.t_network_contended_s) / denom,
                 )
+        return ref, acc
+
+    for routing in ROUTING_POLICIES:
+        arm_params = _dc.replace(noc_params, routing=routing)
+        schedules = [
+            build_schedule(t, p, noc_params=arm_params, params=params)
+            for t, p in zip(traffics, placements)
+        ]
+        ref, acc = run_arm(arm_params, schedules, routing)
         for cfg, res in zip(configs, ref):
-            rec = {"key": cfg.key, **_dc.asdict(cfg), **res.to_dict()}
-            records.append(rec)
+            records.append({"key": cfg.key, **_dc.asdict(cfg), **res.to_dict()})
+        if buffer_depths is None:
+            continue
+        # Closed-loop credit arm: one record set per buffer depth (the
+        # schedules are flow-control-independent and reused verbatim).
+        for depth in buffer_depths:
+            cr_params = _dc.replace(
+                arm_params, flow_control="credit", buffer_depth=float(depth)
+            )
+            cref, _ = run_arm(cr_params, schedules, f"{routing}_credit_d{depth:g}")
+            for cfg, res in zip(configs, cref):
+                records.append({"key": cfg.key, **_dc.asdict(cfg), **res.to_dict()})
+        # Infinite-credit convergence audit vs the open-loop records above.
+        inf_params = _dc.replace(
+            arm_params, flow_control="credit", buffer_depth=float("inf")
+        )
+        iref, iacc = run_arm(inf_params, schedules, f"{routing}_credit_inf")
+        for r_o, r_i in zip(ref, iref):
+            inf_np_max_abs = max(
+                inf_np_max_abs,
+                abs(r_o.t_network_contended_s - r_i.t_network_contended_s),
+                abs(r_o.t_drain_s - r_i.t_drain_s),
+                abs(r_o.mean_queue_delay_s - r_i.mean_queue_delay_s),
+            )
+        if acc is not None and iacc is not None:
+            inf_jax_max_rel = inf_jax_max_rel or 0.0
+            for r_o, r_i in zip(acc, iacc):
+                denom = max(abs(r_o.t_network_contended_s), 1e-300)
+                inf_jax_max_rel = max(
+                    inf_jax_max_rel,
+                    abs(r_o.t_network_contended_s - r_i.t_network_contended_s) / denom,
+                )
     return {
         "noc_params": _dc.asdict(noc_params),
         "records": records,
         "backends": backends,
         "backend_parity_max_rel": parity_max if have_jax else None,
         "parity_rtol": PARITY_RTOL,
+        "buffer_depths": list(buffer_depths) if buffer_depths is not None else None,
+        "credit_inf_numpy_max_abs": inf_np_max_abs,
+        "credit_inf_jax_max_rel": inf_jax_max_rel,
         "timings": timings,
     }

@@ -82,6 +82,10 @@ class NocSimParams:
     inj_rate: float = 1.0  # offered rate as a fraction of link bandwidth
     burst_frac: float = 0.25  # burst profile: share of windows carrying bytes
     latency_q: float = 0.99  # tail quantile reported as p99_latency_s
+    flow_control: str = "open"  # open | credit (see nocsim.credit)
+    # Per-link buffer depth in units of one window's service (credit arm
+    # only).  inf recovers the open-loop arm bit-for-bit (tested contract).
+    buffer_depth: float = float("inf")
 
     def __post_init__(self):
         if self.windows < 1:
@@ -90,6 +94,10 @@ class NocSimParams:
             raise ValueError(f"unknown profile {self.profile!r}")
         if self.routing not in ("dor", "adaptive2"):
             raise ValueError(f"unknown routing {self.routing!r}")
+        if self.flow_control not in ("open", "credit"):
+            raise ValueError(f"unknown flow_control {self.flow_control!r}")
+        if not (self.buffer_depth > 0):
+            raise ValueError("buffer_depth must be > 0 (inf for unbounded)")
         if not (self.inj_rate > 0):
             raise ValueError("inj_rate must be > 0")
         if not (0.0 < self.burst_frac <= 1.0):
@@ -122,6 +130,8 @@ class NocSimResult:
     backend: str
     util_timeline: np.ndarray  # (W,) per-window bottleneck utilization
     link_peak_util: np.ndarray  # (L,) per-link max window utilization
+    flow_control: str = "open"  # which stepper arm produced the timelines
+    buffer_depth: float | None = None  # credit arm only (None ≡ open loop)
 
     def to_dict(self) -> dict:
         d = {}
@@ -322,6 +332,10 @@ def assemble_result(
     bw = params.link_bandwidth_bytes_per_s
     cap = schedule.cap_bytes
     w = noc_params.windows
+    # Credit arm provenance on the record: buffer_depth reported only when
+    # the closed-loop stepper ran (inf serializes as null via to_dict).
+    flow_control = noc_params.flow_control
+    buffer_depth = noc_params.buffer_depth if flow_control == "credit" else None
     if schedule.peak_load <= 0.0 or cap <= 0.0:
         zeros_w = np.zeros(w)
         t_latency = num_iterations * schedule.avg_hops * params.hop_latency_s
@@ -345,6 +359,8 @@ def assemble_result(
             backend=backend,
             util_timeline=zeros_w,
             link_peak_util=np.zeros(schedule.link_loads.shape),
+            flow_control=flow_control,
+            buffer_depth=buffer_depth,
         )
     serviced = np.asarray(serviced, dtype=np.float64)
     backlog = np.asarray(backlog, dtype=np.float64)
@@ -390,6 +406,8 @@ def assemble_result(
         backend=backend,
         util_timeline=per_window_peak / cap,
         link_peak_util=link_peak_util,
+        flow_control=flow_control,
+        buffer_depth=buffer_depth,
     )
 
 

@@ -85,6 +85,79 @@ def test_jax_backend_reproduces_golden_within_f32(golden):
     _compare(golden["records"], got, rtol=JAX_RTOL)
 
 
+CONTENTION_FIXTURE = (
+    pathlib.Path(__file__).parent / "fixtures" / "golden_contention_mesh2d.json"
+)
+
+
+@pytest.fixture(scope="module")
+def golden_contention():
+    return json.loads(CONTENTION_FIXTURE.read_text())
+
+
+def _contention_grid(fixture):
+    g = fixture["grid"]
+    return dataclasses.replace(
+        GRIDS["contention"],
+        workloads=tuple(g["workloads"]),
+        algorithms=tuple(g["algorithms"]),
+        topologies=tuple(g["topologies"]),
+        parts=tuple(g["parts"]),
+        scale=g["scale"],
+        placements=tuple(g["placements"]),
+    )
+
+
+@pytest.fixture(scope="module")
+def contention_run(golden_contention):
+    """One tiny-sweep run shared by the contention golden tests.  The
+    contention pass always reports float64 numpy reference records and — when
+    jax is importable — measures the numpy↔jax parity on the contended
+    T_network internally, so a single run covers both backends."""
+    result = run_sweep(
+        _contention_grid(golden_contention), cache_dir=None, measure_serial=False
+    )
+    return result.to_dict()["contention"]
+
+
+def _compare_contention(golden_records, got, *, rtol, skip=()):
+    assert len(golden_records) == 4  # 2 configs x 2 routing arms
+    for ref in golden_records:
+        key = (ref["key"], ref["routing"])
+        assert key in got, f"contention record {key} missing after refactor"
+        rec = got[key]
+        for field, want in ref.items():
+            if field in SKIP_FIELDS or field in skip:
+                continue
+            have = rec[field]
+            if isinstance(want, float) and rtol:
+                scale = max(abs(want), 1e-300)
+                assert abs(have - want) / scale <= rtol, (
+                    f"{key}.{field}: {have!r} vs golden {want!r}"
+                )
+            else:
+                assert have == want, f"{key}.{field}: {have!r} vs golden {want!r}"
+
+
+def test_contention_numpy_reproduces_golden_bitexact(golden_contention, contention_run):
+    """The credit-arm refactor of the shared window stepper must not perturb
+    the committed open-loop contention records: numpy bit-exact, every frozen
+    field (the fixture was generated before the refactor)."""
+    got = {(r["key"], r["routing"]): r for r in contention_run["records"]}
+    _compare_contention(golden_contention["records"], got, rtol=0)
+
+
+def test_contention_jax_within_f32_of_golden(golden_contention, contention_run):
+    """jax side of the freeze: the run above measured the stacked-scan parity
+    against the same numpy reference the fixture pins bit-exactly, so parity
+    ≤ 1e-6 bounds the jax arm within 1e-6 of the frozen records (the frozen
+    measurement on this slice is ~2e-9, leaving ~500× slack)."""
+    pytest.importorskip("jax")
+    assert "jax" in contention_run["backends"]
+    parity = contention_run["backend_parity_max_rel"]
+    assert parity is not None and parity <= JAX_RTOL
+
+
 def test_fixture_matches_committed_bench(golden):
     """The fixture must stay in sync with the repo's BENCH_sweep.json amazon
     slice whenever that file is regenerated with the same grid/scale."""

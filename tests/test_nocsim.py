@@ -330,7 +330,9 @@ class TestSweepAndReportWiring:
             algorithms=("bfs",),
             parts=(4,),
             scale=0.001,
-            placements=("quad", "random"),  # avoid the exact-MILP auto route
+            # avoid the exact-MILP auto route; greedy also covers torus3d,
+            # where the 2-D quad construction does not apply
+            placements=("greedy", "random"),
         )
         return run_sweep(grid, cache_dir=None, measure_serial=False)
 
@@ -339,9 +341,20 @@ class TestSweepAndReportWiring:
 
         grid = GRIDS["contention"]
         assert grid.contention
-        assert set(grid.topologies) == {"mesh2d", "torus2d"}
+        assert set(grid.topologies) == {"mesh2d", "torus2d", "torus3d"}
         # proposed-vs-baseline pairing on every cell
-        assert grid.num_configs == 16
+        assert grid.num_configs == 24
+        assert grid.buffer_depths is None  # open loop only; credit is §Backpressure
+
+    def test_backpressure_grid_shape(self):
+        from repro.experiments.grid import GRIDS
+
+        grid = GRIDS["backpressure"]
+        assert grid.contention
+        assert set(grid.topologies) == {"mesh2d", "torus2d", "torus3d"}
+        assert grid.buffer_depths is not None and len(grid.buffer_depths) >= 2
+        assert tuple(grid.buffer_depths) == tuple(sorted(grid.buffer_depths))
+        assert GRIDS["minicredit"].buffer_depths == (1.0, 4.0)
 
     def test_sweep_contention_payload(self, tiny_contention_sweep):
         payload = tiny_contention_sweep.to_dict()
@@ -362,7 +375,7 @@ class TestSweepAndReportWiring:
         text = _contention_section(tiny_contention_sweep.to_dict())
         assert "`--grid contention`" in text
         assert "peak util (mapped)" in text
-        assert "powerlaw+quad" in text  # every non-baseline scheme gets a row
+        assert "powerlaw+greedy" in text  # every non-baseline scheme gets a row
         assert "strictly lower" in text
         assert "jax.lax.scan" in text
 
@@ -402,3 +415,93 @@ class TestSweepAndReportWiring:
         write_all(worse)
         issues = experiments_md_issues(str(md), str(js), str(sweeps))
         assert any("no contended records" in i for i in issues)
+
+
+class TestBackpressureWiring:
+    """The credit arm through the sweep → artifact → report → gate chain,
+    exercised on the committed `minicredit` grid (seconds, not minutes)."""
+
+    @pytest.fixture(scope="class")
+    def minicredit_sweep(self):
+        from repro.experiments.grid import GRIDS
+        from repro.experiments.sweep import run_sweep
+
+        return run_sweep(GRIDS["minicredit"], cache_dir=None, measure_serial=False)
+
+    def test_payload_has_credit_arm(self, minicredit_sweep):
+        payload = minicredit_sweep.to_dict()
+        cont = payload["contention"]
+        by_arm = {}
+        for r in cont["records"]:
+            by_arm.setdefault((r["flow_control"], r["buffer_depth"]), []).append(r)
+        # open + one record set per committed depth, each covering both
+        # routing arms on every config
+        n_open = len(by_arm[("open", None)])
+        assert set(by_arm) == {("open", None), ("credit", 1.0), ("credit", 4.0)}
+        assert all(len(v) == n_open for v in by_arm.values())
+        assert cont["buffer_depths"] == [1.0, 4.0]
+        # infinite-credit audit: bit-exact numpy, in-parity jax
+        assert cont["credit_inf_numpy_max_abs"] == 0.0
+        assert cont["credit_inf_jax_max_rel"] is not None
+        assert cont["credit_inf_jax_max_rel"] <= cont["parity_rtol"]
+        parity = cont["backend_parity_max_rel"]
+        assert parity is not None and parity <= cont["parity_rtol"]
+
+    def test_backpressure_section_renders(self, minicredit_sweep):
+        from repro.experiments.report import _backpressure_section
+
+        text = _backpressure_section(minicredit_sweep.to_dict())
+        assert "`--grid backpressure`" in text
+        assert "win d=1" in text and "win d=4" in text
+        assert "retained-win ratio" in text
+        assert "must be 0" in text
+
+    def test_check_gates_backpressure(self, tmp_path, minicredit_sweep):
+        import json
+
+        from repro.experiments.report import experiments_md_issues
+
+        sweeps = tmp_path / "sweeps"
+        sweeps.mkdir()
+        payload = minicredit_sweep.to_dict()
+        md = tmp_path / "EXPERIMENTS.md"
+        js = tmp_path / "BENCH_sweep.json"
+
+        def write_all(p):
+            (sweeps / "backpressure.json").write_text(json.dumps(p))
+            md.write_text(
+                "## §Backpressure (`--grid backpressure`)\n"
+                f"**{len(payload['records'])} configurations**\n"
+                f"scale {payload['grid']['scale']:g}; backend\n"
+                f"`place_batch`: {payload['placement_stats']['batched_configs']}"
+                " searched configs\n"
+            )
+            js.write_text(json.dumps(payload))
+
+        write_all(payload)
+        issues = experiments_md_issues(str(md), str(js), str(sweeps))
+        # The tiny grid is mesh2d-only, so exactly the torus3d gate trips —
+        # proof the topology-coverage gate is live; the real artifact
+        # committed under artifacts/sweeps covers the full axis.
+        assert len(issues) == 1 and "torus3d" in issues[0]
+        for mutate, needle in [
+            (lambda p: p["contention"].update(credit_inf_numpy_max_abs=1e-9),
+             "bit-identically"),
+            (lambda p: p["contention"].update(credit_inf_jax_max_rel=1e-3),
+             "infinite-credit jax"),
+            (lambda p: p["contention"].update(backend_parity_max_rel=1e-3),
+             "parity"),
+            (lambda p: p["contention"].update(
+                records=[r for r in p["contention"]["records"]
+                         if r["flow_control"] != "credit"]),
+             "no credit-arm records"),
+            (lambda p: p["contention"].update(
+                records=[r for r in p["contention"]["records"]
+                         if r["buffer_depth"] != 4.0]),
+             "buffer_depth axis"),
+        ]:
+            bad = json.loads(json.dumps(payload))
+            mutate(bad)
+            write_all(bad)
+            issues = experiments_md_issues(str(md), str(js), str(sweeps))
+            assert any(needle in i for i in issues), (needle, issues)

@@ -1,0 +1,275 @@
+"""Conservation-law property harness for EVERY nocsim stepper arm.
+
+The windowed steppers (open loop in `nocsim.batch`, credit/backpressure in
+`nocsim.credit`) are byte-moving recursions, so they obey checkable physics
+at EVERY window, not just in the final scalars:
+
+  * conservation — bytes injected so far == bytes serviced so far plus the
+    outstanding backlog (buffer + held-at-source), per link, per window;
+  * capacity — a link never services more than one window of bandwidth,
+    and under credit flow control its buffer occupancy never exceeds
+    `buffer_depth` windows of capacity;
+  * monotonicity — contended T_network never improves when buffers shrink;
+  * convergence — the credit arm at `buffer_depth=inf` IS the open-loop
+    arm: bit-identical on the float64 numpy reference, within the 1e-6
+    parity contract on the f32 jax scan, on all four routed topologies ×
+    both routing arms;
+  * chunk invariance — `run_windows` window-chunking is bit-identical to
+    the unchunked run at the adversarial sizes 1, W−1 and W for both arms
+    and both backends (the carry path is ONE shared driver).
+
+Randomised cases go through the vendored `_hypothesis_compat` runner, so
+the suite property-tests deterministically even on the offline container.
+
+Tolerances: conservation holds only to ~1e-9 relative under finite credit
+because `arrivals = max(inj + inc@(admitted − offered), 0)` clamps an
+ulp-negative cancellation (see nocsim/credit.py docstring); everything the
+clamp cannot touch (open loop, infinite credit) is asserted bit-exact.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.noc import FlattenedButterfly, Mesh2D, Torus2D, Torus3D
+from repro.core.placement import Placement
+from repro.core.traffic import TrafficMatrix
+from repro.nocsim import (
+    NocSimParams,
+    build_credit_program,
+    contended_batch,
+    open_step,
+    run_credit,
+    run_windows,
+)
+from repro.nocsim.batch import PARITY_RTOL
+from repro.nocsim.model import build_schedule
+
+FOUR_TOPOLOGIES = (
+    Mesh2D(4, 4),
+    Torus2D(4, 4),
+    Torus3D(3, 3, 2),
+    FlattenedButterfly(4, 4),
+)
+TOPO_IDS = ["mesh2d", "torus2d", "torus3d", "fbfly"]
+ROUTINGS = ("dor", "adaptive2")
+# Relative slack for sums polluted by the credit arrivals clamp (ulp-level).
+CONSERVATION_RTOL = 1e-9
+
+
+def _traffic(parts: int, seed: int, density: float = 0.4) -> TrafficMatrix:
+    rng = np.random.default_rng(seed)
+    n = 4 * parts
+    m = (rng.random((n, n)) < density) * rng.integers(1, 2000, size=(n, n)).astype(
+        np.float64
+    )
+    np.fill_diagonal(m, 0.0)
+    return TrafficMatrix(
+        num_parts=parts,
+        bytes_matrix=m,
+        phase_bytes={"process": float(m.sum()), "reduce": 0.0, "apply": 0.0},
+    )
+
+
+def _setup(topo, seed):
+    parts = topo.num_nodes // 4
+    t = _traffic(parts, seed)
+    rng = np.random.default_rng(seed + 1)
+    site = rng.permutation(topo.num_nodes)[: t.num_logical].astype(np.int64)
+    return t, Placement(topo, site, "test")
+
+
+def _program(topo, seed, *, routing="dor", depth=2.0, windows=32):
+    noc = NocSimParams(
+        windows=windows, routing=routing, flow_control="credit", buffer_depth=depth
+    )
+    t, pl = _setup(topo, seed)
+    sched = build_schedule(t, pl, noc_params=noc)
+    return build_credit_program([sched], noc), noc
+
+
+def _open_inj(topo, seed, *, routing="dor", windows=32):
+    noc = NocSimParams(windows=windows, routing=routing)
+    t, pl = _setup(topo, seed)
+    s = build_schedule(t, pl, noc_params=noc)
+    inj = np.zeros((windows, 1, s.inj.shape[1]), dtype=np.float64)
+    inj[:, 0, :] = s.inj / s.cap_bytes
+    return inj
+
+
+class TestConservation:
+    """Injected == serviced + outstanding, at EVERY window, for every arm."""
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    def test_open_loop_per_window(self, topo):
+        inj = _open_inj(topo, 10)
+        (serviced, backlog), _ = run_windows(open_step("numpy"), (inj,), None)
+        injected = np.cumsum(inj, axis=0)
+        drained = np.cumsum(serviced, axis=0)
+        np.testing.assert_allclose(
+            injected, drained + backlog, rtol=CONSERVATION_RTOL, atol=1e-12
+        )
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    @pytest.mark.parametrize("routing", ROUTINGS)
+    def test_credit_per_window(self, topo, routing):
+        program, _ = _program(topo, 11, routing=routing, depth=1.0)
+        tl, _ = run_credit(program, backend="numpy")
+        # Per link: everything ever offered to the fabric (the open-loop
+        # program) == serviced so far + buffer + route-mapped source holdback.
+        injected = np.cumsum(program.inj, axis=0)
+        drained = np.cumsum(tl.serviced, axis=0)
+        np.testing.assert_allclose(
+            injected, drained + tl.eff_backlog, rtol=CONSERVATION_RTOL, atol=1e-12
+        )
+        # Per flow: offered == admitted so far + held at source.
+        offered = np.cumsum(program.offered, axis=0)
+        admitted = np.cumsum(tl.admitted, axis=0)
+        np.testing.assert_allclose(
+            offered, admitted + tl.src, rtol=CONSERVATION_RTOL, atol=1e-12
+        )
+
+    @given(seed=st.integers(0, 10_000), depth=st.sampled_from([0.5, 1.0, 2.0, 8.0]))
+    @settings(max_examples=15)
+    def test_credit_conservation_fuzzed(self, seed, depth):
+        program, _ = _program(Mesh2D(4, 4), seed, depth=depth)
+        tl, (src, buf) = run_credit(program, backend="numpy")
+        total_in = program.inj.sum()
+        total_out = tl.serviced.sum() + tl.eff_backlog[-1].sum()
+        assert total_out == pytest.approx(total_in, rel=CONSERVATION_RTOL, abs=1e-12)
+        # The returned carry is the last timeline row (segment composition).
+        np.testing.assert_array_equal(src, tl.src[-1])
+        np.testing.assert_array_equal(buf, tl.buf[-1])
+
+
+class TestCapacity:
+    """Service ≤ one window of bandwidth; credit buffers ≤ buffer_depth."""
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    def test_open_service_bounded(self, topo):
+        inj = _open_inj(topo, 12)
+        (serviced, backlog), _ = run_windows(open_step("numpy"), (inj,), None)
+        assert serviced.max() <= 1.0
+        assert serviced.min() >= 0.0 and backlog.min() >= 0.0
+
+    @given(seed=st.integers(0, 10_000), depth=st.sampled_from([0.25, 0.5, 1.0, 4.0]))
+    @settings(max_examples=15)
+    def test_credit_occupancy_never_exceeds_depth(self, seed, depth):
+        program, _ = _program(Torus2D(4, 4), seed, depth=depth)
+        tl, _ = run_credit(program, backend="numpy")
+        assert tl.serviced.max() <= 1.0
+        # Admission is gated on headroom, so occupancy can never exceed
+        # capacity × depth on any link in any window (ulp slack only).
+        assert tl.buf.max() <= depth * (1.0 + 1e-12)
+        # arrived = buf_prev + arrivals also respects depth + one window cap.
+        assert (tl.buf + tl.serviced).max() <= depth + 1.0 + 1e-12
+        assert tl.src.min() >= 0.0 and tl.buf.min() >= 0.0
+
+
+class TestMonotonicity:
+    """Shrinking buffers can only slow the network down: contended
+    T_network is non-increasing in buffer_depth (t_drain alone is NOT
+    monotone — source holdback shifts bytes out of the drain sum — which
+    is why the metric under contract includes the queueing term)."""
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    @pytest.mark.parametrize("routing", ROUTINGS)
+    def test_t_network_monotone_in_depth(self, topo, routing):
+        t, pl = _setup(topo, 13)
+        results = []
+        for depth in (0.25, 0.5, 1.0, 2.0, 4.0, float("inf")):
+            noc = NocSimParams(
+                routing=routing, flow_control="credit", buffer_depth=depth
+            )
+            res = contended_batch([t], [pl], noc_params=noc, backend="numpy")[0]
+            results.append((depth, res.t_network_contended_s))
+        for (d_lo, t_lo), (d_hi, t_hi) in zip(results, results[1:]):
+            assert t_lo >= t_hi * (1.0 - 1e-12), (
+                f"T_network increased with depth on {topo.name}/{routing}: "
+                f"depth {d_lo} -> {t_lo}, depth {d_hi} -> {t_hi}"
+            )
+
+
+class TestInfiniteCreditLimit:
+    """buffer_depth=inf IS the open loop — the convergence contract."""
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    @pytest.mark.parametrize("routing", ROUTINGS)
+    def test_numpy_bit_identical(self, topo, routing):
+        t, pl = _setup(topo, 14)
+        inf_noc = NocSimParams(
+            routing=routing, flow_control="credit", buffer_depth=float("inf")
+        )
+        open_noc = NocSimParams(routing=routing)
+        res_inf = contended_batch([t], [pl], noc_params=inf_noc, backend="numpy")[0]
+        res_open = contended_batch([t], [pl], noc_params=open_noc, backend="numpy")[0]
+        assert res_inf.t_network_contended_s == res_open.t_network_contended_s
+        assert res_inf.t_drain_s == res_open.t_drain_s
+        assert res_inf.mean_queue_delay_s == res_open.mean_queue_delay_s
+        np.testing.assert_array_equal(res_inf.util_timeline, res_open.util_timeline)
+
+    @pytest.mark.parametrize("topo", FOUR_TOPOLOGIES, ids=TOPO_IDS)
+    @pytest.mark.parametrize("routing", ROUTINGS)
+    def test_jax_within_parity(self, topo, routing):
+        pytest.importorskip("jax")
+        t, pl = _setup(topo, 14)
+        inf_noc = NocSimParams(
+            routing=routing, flow_control="credit", buffer_depth=float("inf")
+        )
+        open_noc = NocSimParams(routing=routing)
+        res_inf = contended_batch([t], [pl], noc_params=inf_noc, backend="jax")[0]
+        res_open = contended_batch([t], [pl], noc_params=open_noc, backend="jax")[0]
+        rel = abs(res_inf.t_network_contended_s - res_open.t_network_contended_s) / abs(
+            res_open.t_network_contended_s
+        )
+        assert rel <= PARITY_RTOL
+
+    def test_result_metadata_carries_the_arm(self):
+        t, pl = _setup(Mesh2D(4, 4), 15)
+        noc = NocSimParams(flow_control="credit", buffer_depth=2.0)
+        res = contended_batch([t], [pl], noc_params=noc, backend="numpy")[0]
+        assert res.flow_control == "credit" and res.buffer_depth == 2.0
+        ref = contended_batch([t], [pl], backend="numpy")[0]
+        assert ref.flow_control == "open" and ref.buffer_depth is None
+
+
+class TestChunkBoundary:
+    """`run_windows` is the ONE chunk/carry driver for every arm; chunked
+    runs must be bit-identical to the unchunked run at the adversarial
+    sizes 1, W−1 and W (regression for the carry hand-off)."""
+
+    CHUNKS = (1, 31, 32, 5)
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax"])
+    def test_open_arm(self, backend):
+        if backend == "jax":
+            pytest.importorskip("jax")
+        inj = _open_inj(Mesh2D(4, 4), 16)
+        ref, _ = run_windows(open_step(backend), (inj,), None)
+        for chunk in self.CHUNKS:
+            got, _ = run_windows(open_step(backend), (inj,), None, window_chunk=chunk)
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax"])
+    def test_credit_arm(self, backend):
+        if backend == "jax":
+            pytest.importorskip("jax")
+        program, _ = _program(Mesh2D(4, 4), 17, depth=1.0)
+        ref_tl, ref_carry = run_credit(program, backend=backend)
+        for chunk in self.CHUNKS:
+            tl, carry = run_credit(program, backend=backend, window_chunk=chunk)
+            for name in ("serviced", "eff_backlog", "buf", "src", "admitted"):
+                np.testing.assert_array_equal(
+                    getattr(ref_tl, name), getattr(tl, name), err_msg=f"{name}@{chunk}"
+                )
+            np.testing.assert_array_equal(ref_carry[0], carry[0])
+            np.testing.assert_array_equal(ref_carry[1], carry[1])
+
+    @given(chunk=st.integers(1, 40))
+    @settings(max_examples=12)
+    def test_credit_any_chunk_numpy(self, chunk):
+        program, _ = _program(Torus3D(3, 3, 2), 18, depth=0.5)
+        ref_tl, _ = run_credit(program, backend="numpy")
+        tl, _ = run_credit(program, backend="numpy", window_chunk=chunk)
+        np.testing.assert_array_equal(ref_tl.serviced, tl.serviced)
+        np.testing.assert_array_equal(ref_tl.eff_backlog, tl.eff_backlog)

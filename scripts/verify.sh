@@ -74,6 +74,14 @@ fi
 echo "== EXPERIMENTS.md freshness vs committed payloads =="
 python -m repro.experiments.report --check
 
+echo "== parity/determinism contract lint =="
+# Pure-local AST pass: fails on any finding not grandfathered in
+# artifacts/lint_baseline.json (and on stale baseline entries — the
+# baseline is shrink-only), then asserts the ARCHITECTURE.md parity table
+# still matches the @parity_pair registry.
+python -m repro.analysis.lint src --check-baseline
+python -m repro.analysis.parity_table --check
+
 echo "== mini sweep (3 configs) =="
 out="$(mktemp -d)"
 python -m repro.experiments.run --grid mini \

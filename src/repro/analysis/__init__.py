@@ -1,0 +1,34 @@
+"""Static enforcement of the repo's parity/determinism contract.
+
+Everything this reproduction claims rests on a discipline that was, until
+this subsystem, enforced only at runtime: every batched kernel has a serial
+reference it must match (bit-identically or within 1e-6 relative — the
+table in docs/ARCHITECTURE.md), reference paths are float64 numpy, RNG is
+seeded-`Generator`-only, and committed artifact payloads are pure functions
+of config + seed.  A silent tracer leak inside a `lax.scan` body or an
+unordered-set hash in the journal would invalidate sweeps long before any
+property test catches it.
+
+`repro.analysis` makes the discipline a *source-level* contract:
+
+  * `repro.analysis.lint` — an AST linter (`python -m repro.analysis.lint
+    src`) with the RPL rule catalogue (tracer leaks, order-nondeterministic
+    reductions, dtype discipline, RNG hygiene, wall-clock in payloads,
+    parity-registration coverage, suppression hygiene, registry integrity),
+    inline `# repro-lint: disable=RPL00X <reason>` suppressions and a
+    committed `artifacts/lint_baseline.json` for grandfathering.
+  * `repro.analysis.registry` — the `@parity_pair` decorator every public
+    batched kernel must carry, naming its serial reference and contract
+    kind; the linter fails on unregistered kernels.
+  * `repro.analysis.parity_table` — regenerates the ARCHITECTURE.md
+    parity-contract table from the registry (`--check` gates staleness in
+    scripts/verify.sh), so doc and code cannot drift.
+
+This package must stay importable by the kernel layers it audits
+(`experiments`, `nocsim`, `faults`), so nothing here imports repro modules
+at import time — `registry.load_registry()` imports the kernel modules
+lazily.
+"""
+from repro.analysis.registry import ParityEntry, parity_pair
+
+__all__ = ["ParityEntry", "parity_pair"]

@@ -1,0 +1,176 @@
+"""Shared AST helpers for the RPL rules: dotted-name resolution, traced
+control-flow body discovery, and the lightweight taint pass RPL001 runs
+over `lax.scan`/`while_loop`/`fori_loop` bodies."""
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+__all__ = [
+    "dotted_name",
+    "enclosing_functions",
+    "iter_traced_bodies",
+    "local_bindings",
+    "names_in",
+    "tainted_names",
+]
+
+# Which positional argument(s) of each jax control-flow primitive are traced
+# body functions: scan(f, ...), while_loop(cond, body, ...), fori_loop(lo,
+# hi, body, ...).  `lax.map` is matched only under a `lax.` prefix so the
+# Python builtin `map` never trips the rule.
+_BODY_ARGS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "map": (0,),
+}
+_LAX_ONLY = frozenset({"map"})
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """`a.b.c` for Name/Attribute chains, None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """Every Name identifier loaded anywhere inside `node`."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _function_defs(tree: ast.AST) -> dict[str, list[ast.FunctionDef]]:
+    defs: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    return defs
+
+
+def iter_traced_bodies(
+    tree: ast.AST,
+) -> Iterator[tuple[str, ast.FunctionDef | ast.Lambda, ast.Call]]:
+    """Yield (primitive, body_fn, call_site) for every function passed as a
+    traced body to a jax control-flow primitive in the module.  Bodies
+    passed by name resolve to any same-named def in the module (lint-level
+    approximation: shadowing across scopes is rare and over-matching only
+    widens the audit)."""
+    defs = _function_defs(tree)
+    seen: set[int] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None:
+            continue
+        parts = name.split(".")
+        leaf = parts[-1]
+        if leaf not in _BODY_ARGS:
+            continue
+        if leaf in _LAX_ONLY and "lax" not in parts[:-1]:
+            continue
+        # Bare scan/while_loop/fori_loop (from-imports) match too; any other
+        # dotted form must route through a jax/lax namespace.
+        if len(parts) > 1 and not ({"jax", "lax"} & set(parts[:-1])):
+            continue
+        for idx in _BODY_ARGS[leaf]:
+            if idx >= len(node.args):
+                continue
+            arg = node.args[idx]
+            candidates: list[ast.FunctionDef | ast.Lambda] = []
+            if isinstance(arg, ast.Lambda):
+                candidates.append(arg)
+            elif isinstance(arg, ast.Name):
+                candidates.extend(defs.get(arg.id, ()))
+            for fn in candidates:
+                if id(fn) not in seen:
+                    seen.add(id(fn))
+                    yield leaf, fn, node
+
+
+def _param_names(fn: ast.FunctionDef | ast.Lambda) -> set[str]:
+    a = fn.args
+    out = {p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+    if a.vararg:
+        out.add(a.vararg.arg)
+    if a.kwarg:
+        out.add(a.kwarg.arg)
+    return out
+
+
+def _store_names(target: ast.AST) -> set[str]:
+    return {
+        n.id
+        for n in ast.walk(target)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)
+    }
+
+
+def tainted_names(fn: ast.FunctionDef | ast.Lambda) -> set[str]:
+    """Names (transitively) derived from the body function's parameters —
+    the values that are jax tracers when the body runs under trace.  A
+    forward fixed-point over simple assignments: `x = f(tainted)` taints
+    `x` (and every name in a tuple target)."""
+    taint = _param_names(fn)
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if names_in(node.value) & taint:
+                    for tgt in node.targets:
+                        new = _store_names(tgt) - taint
+                        if new:
+                            taint |= new
+                            changed = True
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if node.value is not None and names_in(node.value) & taint:
+                    new = _store_names(node.target) - taint
+                    if new:
+                        taint |= new
+                        changed = True
+            elif isinstance(node, ast.NamedExpr):
+                if names_in(node.value) & taint and node.target.id not in taint:
+                    taint.add(node.target.id)
+                    changed = True
+    return taint
+
+
+def local_bindings(fn: ast.FunctionDef | ast.Lambda) -> set[str]:
+    """Every name bound inside the function (params, assignment/loop/with
+    targets, comprehension targets, nested defs) — anything NOT in this set
+    that gets mutated from the body mutates closure/global state."""
+    bound = _param_names(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            bound.add(node.name)
+        elif isinstance(node, ast.Import):
+            bound.update(a.asname or a.name.split(".")[0] for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            bound.update(a.asname or a.name for a in node.names)
+    return bound
+
+
+def enclosing_functions(tree: ast.AST) -> dict[int, str]:
+    """Map id(node) -> name of the nearest enclosing function def, for
+    rules that exempt specific audited helpers."""
+    out: dict[int, str] = {}
+
+    def visit(node: ast.AST, current: str | None):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            current = node.name
+        for child in ast.iter_child_nodes(node):
+            if current is not None:
+                out[id(child)] = current
+            visit(child, current)
+
+    visit(tree, None)
+    return out

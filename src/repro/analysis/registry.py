@@ -1,0 +1,126 @@
+"""The parity-pair registry: batched kernel ↔ serial reference, declared
+at the definition site.
+
+Every public batched kernel (`*_batch` / `batch_*` in the parity-discipline
+layers `core`, `experiments`, `nocsim`, `faults`) registers its serial
+counterpart with `@parity_pair(serial=..., kind=...)`.  The decorator is
+zero-cost at call time (it returns the function unchanged); its value is
+the registry it populates:
+
+  * `repro.analysis.rules` RPL006 fails the lint when a public batched
+    kernel lacks the decorator, and RPL008 statically resolves every
+    declared `serial=` dotted path against the source tree;
+  * `repro.analysis.parity_table` renders the ARCHITECTURE.md
+    parity-contract table from the registry (`--check` gates staleness),
+    so the documented contract and the code cannot drift;
+  * `tests/test_analysis_lint.py` asserts the historical five pairs of the
+    hand-maintained table are all registered.
+
+`kind` is the strength of the tested contract on the numpy backend:
+
+  * "bit" — bit-identical outputs per config (same summation trees, same
+    tie-breaks, same seeded-RNG streams);
+  * "rel" — equal within a measured relative tolerance (`tol`, default the
+    repo-wide 1e-6 gate).
+
+Nothing here imports repro modules at import time; `load_registry()` pulls
+in the kernel modules lazily so the decorated definitions execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+__all__ = [
+    "KERNEL_MODULES",
+    "PARITY_KINDS",
+    "ParityEntry",
+    "load_registry",
+    "parity_pair",
+    "registered_pairs",
+]
+
+PARITY_KINDS = ("bit", "rel")
+
+# The modules whose import populates the full registry (every module that
+# defines a decorated batched kernel).  `load_registry` imports exactly
+# these; a kernel added elsewhere must be listed here or the parity table
+# will not see it (the RPL006 lint rule still will).
+KERNEL_MODULES = (
+    "repro.experiments.batched",
+    "repro.experiments.placement_batch",
+    "repro.nocsim.batch",
+    "repro.faults.degraded",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityEntry:
+    """One batched-kernel ↔ serial-reference registration."""
+
+    batched: str  # dotted qualname of the decorated batched kernel
+    serial: str  # dotted path of the serial reference it is tested against
+    kind: str  # "bit" | "rel"
+    note: str = ""  # contract prose rendered into the ARCHITECTURE table
+    tol: float | None = None  # relative tolerance for kind="rel"
+
+    def contract(self) -> str:
+        """The human-readable contract cell of the parity table."""
+        if self.kind == "bit":
+            head = "**bit-identical** (numpy backend)"
+        else:
+            tol = self.tol if self.tol is not None else 1e-6
+            head = f"within {tol:g} relative"
+        return f"{head} — {self.note}" if self.note else head
+
+
+_REGISTRY: dict[str, ParityEntry] = {}
+
+
+def parity_pair(
+    *,
+    serial: str,
+    kind: str,
+    note: str = "",
+    tol: float | None = None,
+):
+    """Register the decorated batched kernel against its serial reference.
+
+    `serial` must be the full dotted path of the reference callable (e.g.
+    ``"repro.core.placement.greedy_placement"``) — the lint's RPL008 rule
+    resolves it statically against the source tree, so a renamed or deleted
+    reference fails the lint, not a sweep.  `kind` is "bit" or "rel" (see
+    module docstring); `note` is the contract prose for the generated
+    parity table; `tol` optionally overrides the 1e-6 default for "rel".
+    """
+    if kind not in PARITY_KINDS:
+        raise ValueError(f"kind must be one of {PARITY_KINDS}, got {kind!r}")
+    if not serial or "." not in serial:
+        raise ValueError(f"serial must be a dotted path, got {serial!r}")
+
+    def deco(fn):
+        entry = ParityEntry(
+            batched=f"{fn.__module__}.{fn.__qualname__}",
+            serial=serial,
+            kind=kind,
+            note=note,
+            tol=tol,
+        )
+        _REGISTRY[entry.batched] = entry
+        fn.__parity_pair__ = entry
+        return fn
+
+    return deco
+
+
+def registered_pairs() -> dict[str, ParityEntry]:
+    """The registrations executed so far (no imports triggered)."""
+    return dict(_REGISTRY)
+
+
+def load_registry() -> dict[str, ParityEntry]:
+    """Import every kernel module and return the fully populated registry,
+    keyed by batched-kernel dotted qualname."""
+    for mod in KERNEL_MODULES:
+        importlib.import_module(mod)
+    return dict(_REGISTRY)

@@ -1,0 +1,657 @@
+"""The RPL rule catalogue — each rule enforces one clause of the repo's
+parity/determinism contract (docs/ARCHITECTURE.md, "The batched-vs-serial
+parity contract" + "The analysis layer").
+
+Rules are pluggable: subclass `Rule`, implement `check(module)`, add the
+class to `ALL_RULES`.  Rules receive a parsed `ModuleUnit` (see
+`repro.analysis.engine`) and yield `Finding`s; the engine owns suppression
+filtering (`# repro-lint: disable=RPL00X <reason>`) and baselines, so rules
+report every violation they see.
+
+| id | clause it enforces |
+|---|---|
+| RPL001 | no tracer leaks in `lax.scan`/`while_loop`/`fori_loop` bodies |
+| RPL002 | no order-nondeterministic reductions / set iteration in artifact paths |
+| RPL003 | dtype discipline: float64 numpy references, f32 jax, one audited depth coercion |
+| RPL004 | RNG hygiene: seeded `Generator`s only, never global-state RNG |
+| RPL005 | no wall-clock/entropy in resumable artifact payload modules |
+| RPL006 | every public batched kernel carries `@parity_pair` |
+| RPL007 | suppression hygiene (engine-enforced: reason required, no stale/unknown) |
+| RPL008 | `@parity_pair` declarations resolve: serial path exists, kind valid |
+"""
+from __future__ import annotations
+
+import ast
+import os
+from collections.abc import Iterator
+from typing import TYPE_CHECKING
+
+from repro.analysis.astutil import (
+    dotted_name,
+    enclosing_functions,
+    iter_traced_bodies,
+    local_bindings,
+    names_in,
+    tainted_names,
+)
+from repro.analysis.registry import PARITY_KINDS
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.analysis.engine import Finding, ModuleUnit
+
+__all__ = ["ALL_RULES", "Rule", "rule_catalog"]
+
+
+def _in_package(relpath: str, *packages: str) -> bool:
+    """True when the module lives under any `repro/<package>/` tree."""
+    p = relpath.replace(os.sep, "/")
+    return any(f"repro/{pkg}/" in p for pkg in packages)
+
+
+def _module_basename(relpath: str) -> str:
+    p = relpath.replace(os.sep, "/")
+    return "/".join(p.split("/")[-2:])
+
+
+class Rule:
+    """One contract clause.  `rule_id`/`title` feed the catalogue and the
+    `--list-rules` output; `check` yields raw findings."""
+
+    rule_id: str = ""
+    title: str = ""
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, module: "ModuleUnit", node: ast.AST, message: str) -> "Finding":
+        from repro.analysis.engine import Finding
+
+        return Finding(
+            path=module.relpath,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            rule=self.rule_id,
+            message=message,
+        )
+
+
+class TracerLeakRule(Rule):
+    """RPL001 — inside a traced control-flow body, a Python `float`/`int`/
+    `bool` cast, `.item()`/`.tolist()`, Python branching (`if`/`while`/
+    ternary/`and`/`or`/`not`/`assert`) on a traced value, or mutation of
+    closure state (`xs.append(...)` from a scan body) either crashes under
+    jit (`TracerConversionError`) or — worse — silently bakes one traced
+    value into the compiled program, which is exactly the backend-parity
+    drift the contract exists to prevent."""
+
+    rule_id = "RPL001"
+    title = "tracer leak in jax control-flow body"
+
+    _CASTS = frozenset({"float", "int", "bool", "complex"})
+    _CONCRETIZERS = frozenset({"item", "tolist"})
+    _MUTATORS = frozenset(
+        {"append", "extend", "insert", "add", "update", "remove", "pop",
+         "popitem", "setdefault", "clear", "discard"}
+    )
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        for prim, fn, _call in iter_traced_bodies(module.tree):
+            taint = tainted_names(fn)
+            local = local_bindings(fn)
+            where = f"`{prim}` body `{getattr(fn, 'name', '<lambda>')}`"
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    cname = dotted_name(node.func)
+                    if (
+                        cname in self._CASTS
+                        and node.args
+                        and any(names_in(a) & taint for a in node.args)
+                    ):
+                        yield self.finding(
+                            module, node,
+                            f"{where}: `{cname}()` cast on a traced value "
+                            "concretizes the tracer (use jnp ops instead)",
+                        )
+                    elif (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr in self._CONCRETIZERS
+                        and names_in(node.func.value) & taint
+                    ):
+                        yield self.finding(
+                            module, node,
+                            f"{where}: `.{node.func.attr}()` on a traced value "
+                            "forces a host transfer inside the traced region",
+                        )
+                    elif (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr in self._MUTATORS
+                        and isinstance(node.func.value, ast.Name)
+                        and node.func.value.id not in local
+                    ):
+                        yield self.finding(
+                            module, node,
+                            f"{where}: `{node.func.value.id}.{node.func.attr}(...)` "
+                            "mutates closure state from a traced body — side "
+                            "effects replay at trace time, not per iteration",
+                        )
+                elif isinstance(node, (ast.If, ast.While)):
+                    if names_in(node.test) & taint:
+                        kw = "if" if isinstance(node, ast.If) else "while"
+                        yield self.finding(
+                            module, node,
+                            f"{where}: Python `{kw}` on a traced value — use "
+                            "`jnp.where`/`lax.cond` (trace-time branching "
+                            "freezes one path into the program)",
+                        )
+                elif isinstance(node, ast.IfExp):
+                    if names_in(node.test) & taint:
+                        yield self.finding(
+                            module, node,
+                            f"{where}: ternary on a traced value — use "
+                            "`jnp.where` (Python truthiness concretizes)",
+                        )
+                elif isinstance(node, ast.BoolOp):
+                    if any(names_in(v) & taint for v in node.values):
+                        op = "and" if isinstance(node.op, ast.And) else "or"
+                        yield self.finding(
+                            module, node,
+                            f"{where}: Python `{op}` on a traced value — use "
+                            f"`jnp.logical_{op}` (short-circuit concretizes)",
+                        )
+                elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+                    if names_in(node.operand) & taint:
+                        yield self.finding(
+                            module, node,
+                            f"{where}: Python `not` on a traced value — use "
+                            "`jnp.logical_not`",
+                        )
+                elif isinstance(node, ast.Assert):
+                    if names_in(node.test) & taint:
+                        yield self.finding(
+                            module, node,
+                            f"{where}: `assert` on a traced value evaluates "
+                            "at trace time, not per iteration",
+                        )
+                elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                    yield self.finding(
+                        module, node,
+                        f"{where}: `{'global' if isinstance(node, ast.Global) else 'nonlocal'}` "
+                        "rebinding from a traced body is a trace-time side effect",
+                    )
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Set):
+        return True
+    if isinstance(node, ast.SetComp):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        return name in ("set", "frozenset")
+    return False
+
+
+def _is_unordered_view(node: ast.AST) -> bool:
+    """set exprs, plus `.keys()`/`.values()` calls (builtin `sum` over
+    float dict values re-associates in whatever order the dict was built)."""
+    if _is_set_expr(node):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        return node.func.attr in ("keys", "values")
+    return False
+
+
+class NondeterministicReductionRule(Rule):
+    """RPL002 — reference paths must reduce in a defined order: builtin
+    `sum` over sets/dict views re-associates floats in hash/insertion
+    order, `min`/`max` over a set has hash-dependent tie identity, and any
+    hash fed from a set expression is run-to-run nondeterministic
+    (PYTHONHASHSEED).  Artifact-payload modules additionally may not
+    iterate sets at all — their outputs are compared byte-for-byte by the
+    crash-resume contract."""
+
+    rule_id = "RPL002"
+    title = "order-nondeterministic reduction or set iteration"
+
+    # Modules whose outputs are compared byte-for-byte (journals, cache
+    # shards, rendered reports): set iteration of any kind is banned there.
+    ARTIFACT_MODULES = (
+        "experiments/cache.py",
+        "experiments/journal.py",
+        "experiments/report.py",
+        "experiments/resilience.py",
+        "experiments/run.py",
+    )
+    _REDUCERS = frozenset({"sum", "min", "max"})
+    _HASHES = frozenset({"sha256", "sha1", "md5", "blake2b", "blake2s"})
+
+    def _arg_of_interest(self, call: ast.Call) -> ast.AST | None:
+        if not call.args:
+            return None
+        arg = call.args[0]
+        if isinstance(arg, (ast.GeneratorExp, ast.ListComp)):
+            return arg.generators[0].iter
+        return arg
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        is_artifact = module.relpath.replace(os.sep, "/").endswith(
+            self.ARTIFACT_MODULES
+        )
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                leaf = name.split(".")[-1] if name else ""
+                if name in self._REDUCERS:
+                    src = self._arg_of_interest(node)
+                    if src is not None and (
+                        _is_unordered_view(src)
+                        if name == "sum"
+                        else _is_set_expr(src)
+                    ):
+                        yield self.finding(
+                            module, node,
+                            f"builtin `{name}()` over an unordered collection "
+                            "re-associates in hash/insertion order — sort "
+                            "first or reduce over an ordered array",
+                        )
+                elif leaf in self._HASHES:
+                    for arg in node.args:
+                        if any(_is_set_expr(n) for n in ast.walk(arg)):
+                            yield self.finding(
+                                module, node,
+                                f"`{leaf}()` fed from a set expression — "
+                                "iteration order is PYTHONHASHSEED-dependent; "
+                                "hash a sorted sequence instead",
+                            )
+            elif isinstance(node, ast.For) and is_artifact:
+                if _is_set_expr(node.iter):
+                    yield self.finding(
+                        module, node,
+                        "iterating a set in an artifact-payload module — "
+                        "payloads are compared byte-for-byte, sort the "
+                        "elements first",
+                    )
+            elif isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.DictComp)):
+                if is_artifact and any(
+                    _is_set_expr(g.iter) for g in node.generators
+                ):
+                    yield self.finding(
+                        module, node,
+                        "comprehension over a set in an artifact-payload "
+                        "module — payloads are compared byte-for-byte, sort "
+                        "the elements first",
+                    )
+
+
+class DtypeDisciplineRule(Rule):
+    """RPL003 — the reference layers (`core`, `nocsim`, `faults`) are
+    float64 numpy by contract ("every accelerated path is an
+    *implementation* of a serial reference, never a second semantics"): a
+    stray float32 cast there silently weakens the reference every parity
+    test compares against.  Symmetrically, jax paths are f32 — `jnp.float64`
+    without the x64 config guard silently truncates and drifts from the
+    committed parity numbers.  The credit arm's buffer-depth coercion has
+    ONE audited code path (`nocsim.model.normalize_buffer_depth`); ad-hoc
+    `float(depth)` casts in `nocsim/` bypass its validation."""
+
+    rule_id = "RPL003"
+    title = "dtype discipline violation"
+
+    _REFERENCE_PACKAGES = ("core", "nocsim", "faults")
+
+    @staticmethod
+    def _mentions_depth(node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and "depth" in n.id:
+                return True
+            if isinstance(n, ast.Attribute) and "depth" in n.attr:
+                return True
+        return False
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        in_reference = _in_package(module.relpath, *self._REFERENCE_PACKAGES)
+        in_nocsim = _in_package(module.relpath, "nocsim")
+        has_x64_guard = "jax_enable_x64" in module.source
+        enclosing = (
+            enclosing_functions(module.tree) if in_nocsim else {}
+        )
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Attribute):
+                base = dotted_name(node.value)
+                if (
+                    in_reference
+                    and node.attr == "float32"
+                    and base in ("np", "numpy")
+                ):
+                    yield self.finding(
+                        module, node,
+                        "`np.float32` in a float64 reference path — the "
+                        "numpy reference defines the semantics the jax "
+                        "backend is measured against",
+                    )
+                elif (
+                    node.attr == "float64"
+                    and base in ("jnp", "jax.numpy")
+                    and not has_x64_guard
+                ):
+                    yield self.finding(
+                        module, node,
+                        "`jnp.float64` without the `jax_enable_x64` guard "
+                        "silently truncates to f32 and drifts from the "
+                        "committed parity numbers",
+                    )
+            elif isinstance(node, ast.Call):
+                if in_reference and isinstance(node.func, ast.Attribute):
+                    if node.func.attr == "astype" and any(
+                        isinstance(a, ast.Constant) and a.value == "float32"
+                        for a in node.args
+                    ):
+                        yield self.finding(
+                            module, node,
+                            '`.astype("float32")` in a float64 reference path',
+                        )
+                if in_reference:
+                    for kw in node.keywords:
+                        if (
+                            kw.arg == "dtype"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value == "float32"
+                        ):
+                            yield self.finding(
+                                module, node,
+                                'dtype="float32" in a float64 reference path',
+                            )
+                if (
+                    in_nocsim
+                    and dotted_name(node.func) == "float"
+                    and node.args
+                    and enclosing.get(id(node)) != "normalize_buffer_depth"
+                    and self._mentions_depth(node.args[0])
+                ):
+                    yield self.finding(
+                        module, node,
+                        "ad-hoc `float(...depth...)` coercion — "
+                        "`nocsim.model.normalize_buffer_depth` is the one "
+                        "audited code path for credit-arm depths",
+                    )
+
+
+class RngHygieneRule(Rule):
+    """RPL004 — every random draw must come from a seeded
+    `np.random.Generator` (or the sha256 per-unit derivation in `faults/`):
+    the legacy global-state API (`np.random.seed`/`rand`/`shuffle`/...)
+    and stdlib `random` module functions make results depend on call order
+    across the whole process — unreproducible under resume, re-ordering,
+    or parallelism."""
+
+    rule_id = "RPL004"
+    title = "global-state RNG"
+
+    _NP_ALLOWED = frozenset(
+        {"default_rng", "Generator", "SeedSequence", "PCG64", "PCG64DXSM",
+         "Philox", "MT19937", "SFC64", "BitGenerator", "bit_generator"}
+    )
+    _STDLIB_GLOBAL = frozenset(
+        {"random", "seed", "randint", "randrange", "choice", "choices",
+         "shuffle", "sample", "uniform", "gauss", "normalvariate",
+         "getrandbits", "betavariate", "expovariate", "triangular"}
+    )
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        imports_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(module.tree)
+        )
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            base = dotted_name(node.value)
+            if base in ("np.random", "numpy.random"):
+                if node.attr not in self._NP_ALLOWED:
+                    yield self.finding(
+                        module, node,
+                        f"`{base}.{node.attr}` uses numpy's global RNG state "
+                        "— derive a seeded `np.random.default_rng(seed)` "
+                        "instead",
+                    )
+            elif (
+                imports_random
+                and base == "random"
+                and node.attr in self._STDLIB_GLOBAL
+            ):
+                yield self.finding(
+                    module, node,
+                    f"stdlib `random.{node.attr}` uses process-global state "
+                    "— use a seeded `random.Random(seed)` or numpy Generator",
+                )
+
+
+class WallClockPayloadRule(Rule):
+    """RPL005 — journals and cache shards are pure functions of config +
+    seed: `--resume` must reproduce an interrupted sweep byte-for-byte
+    (tests/test_crash_resume.py literally compares bytes).  Wall-clock or
+    entropy flowing into those payloads breaks the strongest reproduction
+    guarantee the repo makes.  Entropy sources (`os.urandom`, `uuid.uuid4`,
+    `secrets`) are banned everywhere — nothing in a reproduction should
+    need them."""
+
+    rule_id = "RPL005"
+    title = "wall-clock/entropy in artifact payload path"
+
+    PAYLOAD_MODULES = ("experiments/cache.py", "experiments/journal.py")
+    _CLOCKS = frozenset(
+        {"time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+         "datetime.datetime.now", "datetime.datetime.utcnow", "time.ctime"}
+    )
+    _ENTROPY = frozenset({"os.urandom", "uuid.uuid1", "uuid.uuid4"})
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        is_payload = module.relpath.replace(os.sep, "/").endswith(
+            self.PAYLOAD_MODULES
+        )
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            if name in self._ENTROPY or name.startswith("secrets."):
+                yield self.finding(
+                    module, node,
+                    f"`{name}` draws OS entropy — committed artifacts must "
+                    "be pure functions of config + seed",
+                )
+            elif is_payload and name in self._CLOCKS:
+                yield self.finding(
+                    module, node,
+                    f"`{name}` in a byte-compared payload module — resumed "
+                    "runs must reproduce artifacts byte-for-byte "
+                    "(`time.perf_counter` durations outside payloads are fine)",
+                )
+
+
+class ParityRegistrationRule(Rule):
+    """RPL006 — every public batched kernel in the parity-discipline layers
+    must declare its serial counterpart with `@parity_pair(serial=...,
+    kind=...)`.  The registry is what generates the ARCHITECTURE parity
+    table and what the cross-backend tests enumerate; an unregistered
+    kernel is a batched path with no audited reference."""
+
+    rule_id = "RPL006"
+    title = "public batched kernel without @parity_pair registration"
+
+    _PACKAGES = ("core", "experiments", "nocsim", "faults")
+
+    @staticmethod
+    def _is_batch_kernel(name: str) -> bool:
+        return not name.startswith("_") and (
+            name.endswith("_batch") or name.startswith("batch_")
+        )
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        if not _in_package(module.relpath, *self._PACKAGES):
+            return
+        for node in module.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not self._is_batch_kernel(node.name):
+                continue
+            decorated = any(
+                (dotted_name(d.func if isinstance(d, ast.Call) else d) or "")
+                .split(".")[-1]
+                == "parity_pair"
+                for d in node.decorator_list
+            )
+            if not decorated:
+                yield self.finding(
+                    module, node,
+                    f"public batched kernel `{node.name}` has no "
+                    "`@parity_pair(serial=..., kind=...)` registration — "
+                    "every batched path needs an audited serial reference",
+                )
+
+
+class SuppressionHygieneRule(Rule):
+    """RPL007 — suppression comments are part of the contract: each must
+    name known rule ids AND carry a one-line justification, and may not
+    outlive the violation it excuses.  Enforced by the engine (it owns the
+    suppression table); this class exists so the rule appears in the
+    catalogue and `--list-rules`."""
+
+    rule_id = "RPL007"
+    title = "suppression hygiene (malformed/unknown/stale, engine-enforced)"
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        return iter(())
+
+
+class ParityReferenceRule(Rule):
+    """RPL008 — a `@parity_pair` declaration is only worth its ink if the
+    declared serial reference exists: `serial=` must be a literal
+    `repro.*` dotted path whose module file is in the scanned tree and
+    defines the named attribute at top level, and `kind` must be a known
+    contract strength.  A renamed or deleted reference fails the lint, not
+    a 3 a.m. sweep."""
+
+    rule_id = "RPL008"
+    title = "unresolvable @parity_pair declaration"
+
+    def _repro_root(self, module: "ModuleUnit") -> str | None:
+        """Directory that CONTAINS the `repro` package this file lives in."""
+        d = os.path.dirname(os.path.abspath(module.path))
+        while True:
+            if os.path.basename(d) == "repro":
+                return os.path.dirname(d)
+            parent = os.path.dirname(d)
+            if parent == d:
+                return None
+            d = parent
+
+    def _resolve(self, root: str, serial: str) -> str | None:
+        """None when resolvable, else the failure reason."""
+        parts = serial.split(".")
+        if parts[0] != "repro" or len(parts) < 3:
+            return "must be a full `repro.<pkg>.<module>.<name>` dotted path"
+        for split in range(len(parts) - 1, 1, -1):
+            mod_file = os.path.join(root, *parts[:split]) + ".py"
+            pkg_init = os.path.join(root, *parts[:split], "__init__.py")
+            for candidate in (mod_file, pkg_init):
+                if not os.path.isfile(candidate):
+                    continue
+                try:
+                    with open(candidate, encoding="utf-8") as fh:
+                        tree = ast.parse(fh.read())
+                except SyntaxError:
+                    return f"reference module `{candidate}` does not parse"
+                attr = parts[split]
+                names = set()
+                for n in tree.body:
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                        names.add(n.name)
+                    elif isinstance(n, ast.Assign):
+                        for t in n.targets:
+                            if isinstance(t, ast.Name):
+                                names.add(t.id)
+                    elif isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+                        names.add(n.target.id)
+                if attr not in names:
+                    return (
+                        f"module `{'.'.join(parts[:split])}` defines no "
+                        f"top-level `{attr}`"
+                    )
+                return None
+        return f"no module file found for `{serial}` under the scanned tree"
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        decos = [
+            (node, d)
+            for node in ast.walk(module.tree)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            for d in node.decorator_list
+            if (dotted_name(d.func if isinstance(d, ast.Call) else d) or "")
+            .split(".")[-1]
+            == "parity_pair"
+        ]
+        if not decos:
+            return
+        root = self._repro_root(module)
+        for fn, deco in decos:
+            if not isinstance(deco, ast.Call):
+                yield self.finding(
+                    module, deco,
+                    f"`@parity_pair` on `{fn.name}` must be called with "
+                    "serial=/kind= keywords",
+                )
+                continue
+            kwargs = {kw.arg: kw.value for kw in deco.keywords}
+            serial = kwargs.get("serial")
+            kind = kwargs.get("kind")
+            if not isinstance(serial, ast.Constant) or not isinstance(
+                serial.value, str
+            ):
+                yield self.finding(
+                    module, deco,
+                    f"`@parity_pair` on `{fn.name}`: serial= must be a "
+                    "string literal dotted path (the linter resolves it "
+                    "statically)",
+                )
+            elif root is None:
+                yield self.finding(
+                    module, deco,
+                    f"`@parity_pair` on `{fn.name}`: file is not inside a "
+                    "`repro` package, serial path cannot be resolved",
+                )
+            else:
+                why = self._resolve(root, serial.value)
+                if why is not None:
+                    yield self.finding(
+                        module, deco,
+                        f"`@parity_pair` on `{fn.name}`: serial reference "
+                        f"`{serial.value}` is unresolvable — {why}",
+                    )
+            if not (
+                isinstance(kind, ast.Constant) and kind.value in PARITY_KINDS
+            ):
+                yield self.finding(
+                    module, deco,
+                    f"`@parity_pair` on `{fn.name}`: kind= must be a literal "
+                    f"in {PARITY_KINDS}",
+                )
+
+
+ALL_RULES: tuple[type[Rule], ...] = (
+    TracerLeakRule,
+    NondeterministicReductionRule,
+    DtypeDisciplineRule,
+    RngHygieneRule,
+    WallClockPayloadRule,
+    ParityRegistrationRule,
+    SuppressionHygieneRule,
+    ParityReferenceRule,
+)
+
+
+def rule_catalog() -> dict[str, str]:
+    """rule id -> one-line title, for --list-rules and suppression checks."""
+    return {r.rule_id: r.title for r in ALL_RULES}

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis.registry import parity_pair
 from repro.core.noc import Topology
 from repro.core.placement import Placement
 from repro.core.simulator import SimParams, SimResult
@@ -244,6 +245,13 @@ def _contract_jax(stack: np.ndarray, dist: np.ndarray, routing):
     return np.asarray(total, np.float64), np.asarray(bh, np.float64), None
 
 
+@parity_pair(
+    serial="repro.core.simulator.simulate",
+    kind="rel",
+    note="equal to float64 tolerance per config (same routing model via "
+    "`Topology.route_links`; numpy backend bit-exact up to summation "
+    "order, jax f32 within the gate)",
+)
 def simulate_batch(
     traffics: list[TrafficMatrix | SparseTraffic],
     placements: list[Placement],

@@ -87,6 +87,7 @@ from repro.core.placement import (
     torus_cell_site_table,
 )
 from repro.core.traffic import TrafficMatrix
+from repro.analysis.registry import parity_pair
 from repro.experiments.batched import resolve_backend
 
 __all__ = [
@@ -257,6 +258,13 @@ def _greedy_construct_jax(w2: np.ndarray, d: np.ndarray, _seeds: list[int]) -> n
     return np.asarray(sites, dtype=np.int64)
 
 
+@parity_pair(
+    serial="repro.core.placement.greedy_placement",
+    kind="bit",
+    note="same summation trees, same argmax/argmin tie-breaks, same "
+    "seeded-RNG fallback stream per config (jax backend may legally take "
+    "the deterministic first-unplaced fallback on argmax near-ties)",
+)
 def greedy_construct_batch(
     weights: list[np.ndarray] | np.ndarray,
     topologies: list[Topology],
@@ -346,6 +354,13 @@ def _torus_construct_jax(w2: np.ndarray, cell_sites: np.ndarray) -> np.ndarray:
     return np.asarray(sites, dtype=np.int64)
 
 
+@parity_pair(
+    serial="repro.core.placement.torus_quad_placement",
+    kind="bit",
+    note="same `part_traffic_weights` reduction, same stable hub argsort, "
+    "same `torus_cell_site_table` geometry (torus_columnar configs check "
+    "against `torus_columnar_placement` the same way)",
+)
 def torus_construct_batch(
     weights: list[np.ndarray] | np.ndarray,
     topologies: list[Topology],
@@ -429,6 +444,12 @@ def _jax_sparse_h_fn():
     return _JAX_SPARSE_H
 
 
+@parity_pair(
+    serial="repro.core.placement.sparse_weighted_hops",
+    kind="bit",
+    note="same gather + product-sum association per config on the numpy "
+    "backend; jax is f32 (≤ ~1e-5 relative on real traffic)",
+)
 def sparse_weighted_hops_batch(
     coos: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
     sites: list[np.ndarray] | np.ndarray,
@@ -486,6 +507,12 @@ def _jax_pair_deltas_fn():
     return _JAX_PAIR_DELTAS
 
 
+@parity_pair(
+    serial="repro.core.placement.swap_delta_pairs",
+    kind="bit",
+    note="per-pair H deltas bit-equal on the numpy backend (padded no-op "
+    "pairs carry zero delta and cannot win the argmin)",
+)
 def swap_delta_pairs_batch(
     weights: list[np.ndarray],
     topologies: list[Topology],
@@ -767,6 +794,13 @@ def _descend_jax(
 # ---------------------------------------------------------------------------
 
 
+@parity_pair(
+    serial="repro.core.placement.two_opt_best_move",
+    kind="bit",
+    note="bit-identical move sequence per config on the numpy backend "
+    "(shared `swap_delta_matrix`/`move_delta_matrix` kernels, flat argmin "
+    "tie-break, `BEST_MOVE_TOL` convergence)",
+)
 def batch_descend(
     weights: list[np.ndarray] | np.ndarray,
     topologies: list[Topology],
@@ -808,6 +842,13 @@ def batch_descend(
     return list(out), stats
 
 
+@parity_pair(
+    serial="repro.faults.repair.repair_descend",
+    kind="bit",
+    note="replays the serial bounded repair descent bit-for-bit on "
+    "integer-byte weights — degraded distances, dead tiles masked via "
+    "`blocked=` (tests/test_faults_repair.py)",
+)
 def repair_batch(
     weights: list[np.ndarray] | np.ndarray,
     dists: list[np.ndarray] | np.ndarray,
@@ -868,7 +909,7 @@ def _perturbed(init: np.ndarray, topology: Topology, *, seed) -> np.ndarray:
     return site
 
 
-def place_batch(
+def place_batch(  # repro-lint: disable=RPL006 front-end dispatcher, not a kernel: every engine it routes to (greedy/torus construction, batch_descend) carries its own @parity_pair
     traffics: list[TrafficMatrix],
     partitions: list[Partition],
     topologies: list[Topology],

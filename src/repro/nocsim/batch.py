@@ -32,6 +32,7 @@ import time
 
 import numpy as np
 
+from repro.analysis.registry import parity_pair
 from repro.core.placement import Placement
 from repro.core.simulator import SimParams
 from repro.core.traffic import TrafficMatrix
@@ -41,6 +42,7 @@ from repro.nocsim.model import (
     NocSimResult,
     assemble_result,
     build_schedule,
+    normalize_buffer_depth,
 )
 from repro.nocsim.routes import ROUTING_POLICIES
 
@@ -184,6 +186,14 @@ def run_windows(step, xs: tuple, carry, *, window_chunk: int | None = None):
     return stitched, carry
 
 
+@parity_pair(
+    serial="repro.nocsim.model.simulate_contended",
+    kind="rel",
+    note="`simulate_contended` is a 1-config call into the same float64 "
+    "numpy stepper (IS the reference); the stacked jax `lax.scan` agrees "
+    "on contended T_network within 1e-6 relative, measured per contention "
+    "sweep (`backend_parity_max_rel`) and gated by `report --check`",
+)
 def contended_batch(
     traffics: list[TrafficMatrix],
     placements: list[Placement],
@@ -352,14 +362,19 @@ def contention_sweep_payload(
         # schedules are flow-control-independent and reused verbatim).
         for depth in buffer_depths:
             cr_params = _dc.replace(
-                arm_params, flow_control="credit", buffer_depth=float(depth)
+                arm_params,
+                flow_control="credit",
+                buffer_depth=normalize_buffer_depth(depth),
             )
             cref, _ = run_arm(cr_params, schedules, f"{routing}_credit_d{depth:g}")
             for cfg, res in zip(configs, cref):
                 records.append({"key": cfg.key, **_dc.asdict(cfg), **res.to_dict()})
-        # Infinite-credit convergence audit vs the open-loop records above.
+        # Infinite-credit convergence audit vs the open-loop records above
+        # (depth None ≡ unbounded buffering ≡ the open loop, bit-for-bit).
         inf_params = _dc.replace(
-            arm_params, flow_control="credit", buffer_depth=float("inf")
+            arm_params,
+            flow_control="credit",
+            buffer_depth=normalize_buffer_depth(None),
         )
         iref, iacc = run_arm(inf_params, schedules, f"{routing}_credit_inf")
         for r_o, r_i in zip(ref, iref):

@@ -78,7 +78,7 @@ import dataclasses
 import numpy as np
 
 from repro.nocsim.batch import run_windows
-from repro.nocsim.model import ConfigSchedule, NocSimParams
+from repro.nocsim.model import ConfigSchedule, NocSimParams, normalize_buffer_depth
 
 __all__ = [
     "CreditProgram",
@@ -184,7 +184,7 @@ def build_credit_program(
         pair_c=cat(pc),
         pair_l=cat(pl),
         pair_f=cat(pf),
-        depth=float(noc_params.buffer_depth),
+        depth=normalize_buffer_depth(noc_params.buffer_depth),
     )
 
 

@@ -61,8 +61,28 @@ __all__ = [
     "ConfigSchedule",
     "build_schedule",
     "assemble_result",
+    "normalize_buffer_depth",
     "simulate_contended",
 ]
+
+
+def normalize_buffer_depth(depth: float | int | None) -> float:
+    """THE audited coercion for credit-arm buffer depths — every place a
+    depth becomes a float goes through here (`NocSimParams`, the sweep's
+    depth axis, `credit.build_credit_program`), so the validation rules
+    live once and the lint's dtype rule (RPL003) can whitelist exactly one
+    code path.  `None` means "no buffering bound" and maps to +inf, which
+    the credit stepper reproduces the open-loop arm with bit-identically
+    (the tested convergence contract).  Rejects NaN and non-positive
+    depths; accepts ints (grid axes) and returns a plain Python float."""
+    if depth is None:
+        return float("inf")
+    d = float(depth)
+    if d != d:  # NaN: the `> 0` check below would pass it through `not`
+        raise ValueError("buffer_depth must not be NaN")
+    if not d > 0:
+        raise ValueError("buffer_depth must be > 0 (inf for unbounded)")
+    return d
 
 PHASES = ("process", "reduce", "apply")
 _PHASE_PAIRS = {
@@ -96,8 +116,9 @@ class NocSimParams:
             raise ValueError(f"unknown routing {self.routing!r}")
         if self.flow_control not in ("open", "credit"):
             raise ValueError(f"unknown flow_control {self.flow_control!r}")
-        if not (self.buffer_depth > 0):
-            raise ValueError("buffer_depth must be > 0 (inf for unbounded)")
+        object.__setattr__(
+            self, "buffer_depth", normalize_buffer_depth(self.buffer_depth)
+        )
         if not (self.inj_rate > 0):
             raise ValueError("inj_rate must be > 0")
         if not (0.0 < self.burst_frac <= 1.0):

@@ -1,0 +1,668 @@
+"""The analysis layer (`repro.analysis`): rule catalogue, suppression and
+baseline lifecycle, the @parity_pair registry, and the generated
+ARCHITECTURE parity table.
+
+Each rule gets a paired positive/negative fixture (the positive snippet
+violates exactly one clause, the negative is the minimal compliant
+rewrite), and the two ISSUE acceptance mutations are exercised against a
+copy of the REAL tree: stripping one `@parity_pair` decorator must trip
+RPL006, and injecting a `float(tracer)` into the nocsim `lax.scan` body
+must trip RPL001.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import parity_table
+from repro.analysis.engine import (
+    Finding,
+    diff_vs_baseline,
+    lint_paths,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.lint import main as lint_main
+from repro.analysis.registry import (
+    PARITY_KINDS,
+    ParityEntry,
+    load_registry,
+    parity_pair,
+)
+from repro.analysis.rules import ALL_RULES, rule_catalog
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
+BASELINE = REPO_ROOT / "artifacts" / "lint_baseline.json"
+
+
+def lint_snippet(tmp_path, source, relname="repro/nocsim/mod_under_test.py"):
+    """Write `source` into a tmp tree shaped like the real package layout
+    (rules key on `repro/<pkg>/` path segments) and lint the whole tree."""
+    target = tmp_path / relname
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(textwrap.dedent(source))
+    return lint_paths([str(tmp_path)]).findings
+
+
+def rules_fired(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — tracer leaks in traced control-flow bodies
+# ---------------------------------------------------------------------------
+
+
+class TestTracerLeak:
+    def test_float_cast_on_traced_value_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from jax import lax
+
+            def kernel(xs):
+                def step(carry, x):
+                    bad = float(carry)
+                    return carry + bad, carry
+                return lax.scan(step, 0.0, xs)
+        """)
+        assert rules_fired(findings) == {"RPL001"}
+        assert "float" in findings[0].message
+
+    def test_python_if_on_traced_value_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from jax import lax
+
+            def kernel(xs):
+                def step(carry, x):
+                    if carry > 0:
+                        carry = carry - 1
+                    return carry + x, carry
+                return lax.scan(step, 0.0, xs)
+        """)
+        assert rules_fired(findings) == {"RPL001"}
+        assert "`if`" in findings[0].message
+
+    def test_item_and_closure_mutation_fire(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from jax import lax
+
+            trace_log = []
+
+            def kernel(xs):
+                def step(carry, x):
+                    trace_log.append(x)
+                    peek = carry.item()
+                    return carry + x, peek
+                return lax.scan(step, 0.0, xs)
+        """)
+        assert rules_fired(findings) == {"RPL001"}
+        messages = " ".join(f.message for f in findings)
+        assert ".item()" in messages and "trace_log.append" in messages
+
+    def test_while_loop_both_args_and_fori_body_are_traced(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from jax import lax
+
+            def kernel(n, x0):
+                def cond(x):
+                    return bool(x)
+                def body(x):
+                    return x - 1
+                def fbody(i, acc):
+                    return acc + int(i)
+                y = lax.while_loop(cond, body, x0)
+                return lax.fori_loop(0, n, fbody, y)
+        """)
+        assert rules_fired(findings) == {"RPL001"}
+        assert len(findings) == 2  # bool() in cond, int() in fbody
+
+    def test_clean_scan_body_passes(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import jax.numpy as jnp
+            from jax import lax
+
+            def kernel(xs):
+                def step(carry, x):
+                    nxt = jnp.where(carry > 0, carry - 1.0, carry)
+                    return nxt + x, nxt
+                return lax.scan(step, 0.0, xs)
+        """)
+        assert findings == []
+
+    def test_builtin_map_is_not_a_traced_body(self, tmp_path):
+        # only lax.map counts — builtin map must not put `f` under taint
+        findings = lint_snippet(tmp_path, """
+            def host_side(values):
+                def f(v):
+                    return float(v)
+                return list(map(f, values))
+        """)
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — order-nondeterministic reductions
+# ---------------------------------------------------------------------------
+
+
+class TestNondeterministicReduction:
+    def test_sum_over_set_and_dict_values_fire(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            def totals(loads):
+                a = sum({1.0, 2.0, 3.0})
+                b = sum(loads.values())
+                return a + b
+        """)
+        assert [f.rule for f in findings] == ["RPL002", "RPL002"]
+
+    def test_hash_fed_from_set_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import hashlib
+
+            def digest(parts):
+                return hashlib.sha256(str(set(parts)).encode()).hexdigest()
+        """)
+        assert rules_fired(findings) == {"RPL002"}
+
+    def test_set_iteration_only_flagged_in_artifact_modules(self, tmp_path):
+        src = """
+            def payload(units):
+                return [u for u in set(units)]
+        """
+        clean = lint_snippet(tmp_path / "a", src, "repro/core/free.py")
+        assert clean == []
+        flagged = lint_snippet(tmp_path / "b", src, "repro/experiments/cache.py")
+        assert rules_fired(flagged) == {"RPL002"}
+
+    def test_minmax_over_dict_values_is_order_deterministic(self, tmp_path):
+        # max over float dict values has a well-defined result regardless of
+        # iteration order — the real tree relies on this (report/simulator)
+        findings = lint_snippet(tmp_path, """
+            def peak(link_load):
+                return max(link_load.values())
+
+            def sorted_total(link_load):
+                return sum(sorted(link_load.values()))
+        """)
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — dtype discipline
+# ---------------------------------------------------------------------------
+
+
+class TestDtypeDiscipline:
+    def test_float32_in_reference_package_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import numpy as np
+
+            def weaken(x):
+                a = np.float32(x)
+                b = x.astype("float32")
+                c = np.zeros(3, dtype="float32")
+                return a, b, c
+        """, "repro/core/weaken.py")
+        assert [f.rule for f in findings] == ["RPL003"] * 3
+
+    def test_float32_outside_reference_packages_is_fine(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import numpy as np
+
+            def accel(x):
+                return np.float32(x)
+        """, "repro/models/accel.py")
+        assert findings == []
+
+    def test_jnp_float64_needs_x64_guard(self, tmp_path):
+        bad = lint_snippet(tmp_path / "a", """
+            import jax.numpy as jnp
+
+            def f(x):
+                return jnp.asarray(x, dtype=jnp.float64)
+        """, "repro/models/f64.py")
+        assert rules_fired(bad) == {"RPL003"}
+        good = lint_snippet(tmp_path / "b", """
+            import jax
+            import jax.numpy as jnp
+
+            jax.config.update("jax_enable_x64", True)
+
+            def f(x):
+                return jnp.asarray(x, dtype=jnp.float64)
+        """, "repro/models/f64.py")
+        assert good == []
+
+    def test_adhoc_depth_coercion_in_nocsim_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            def schedule(params):
+                return float(params.buffer_depth)
+        """)
+        assert rules_fired(findings) == {"RPL003"}
+        assert "normalize_buffer_depth" in findings[0].message
+
+    def test_the_audited_helper_itself_is_exempt(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            def normalize_buffer_depth(depth):
+                if depth is None:
+                    return float("inf")
+                return float(depth)
+        """)
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — RNG hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestRngHygiene:
+    def test_global_state_numpy_rng_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import numpy as np
+
+            def jitter(n):
+                np.random.seed(0)
+                return np.random.rand(n)
+        """, "repro/core/jitter.py")
+        assert [f.rule for f in findings] == ["RPL004", "RPL004"]
+
+    def test_stdlib_random_module_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import random
+
+            def pick(xs):
+                return random.choice(xs)
+        """, "repro/core/pick.py")
+        assert rules_fired(findings) == {"RPL004"}
+
+    def test_seeded_generator_passes(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import numpy as np
+
+            def jitter(n, seed):
+                rng = np.random.default_rng(seed)
+                return rng.random(n)
+        """, "repro/core/jitter.py")
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — wall-clock/entropy in payloads
+# ---------------------------------------------------------------------------
+
+
+class TestWallClockPayload:
+    def test_entropy_banned_everywhere(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import os
+            import uuid
+
+            def token():
+                return os.urandom(8).hex() + str(uuid.uuid4())
+        """, "repro/models/token.py")
+        assert [f.rule for f in findings] == ["RPL005", "RPL005"]
+
+    def test_wall_clock_only_flagged_in_payload_modules(self, tmp_path):
+        src = """
+            import time
+
+            def stamp():
+                return time.time()
+        """
+        clean = lint_snippet(tmp_path / "a", src, "repro/launch/stamp.py")
+        assert clean == []
+        flagged = lint_snippet(tmp_path / "b", src, "repro/experiments/journal.py")
+        assert rules_fired(flagged) == {"RPL005"}
+
+    def test_perf_counter_durations_are_fine_in_payload_modules(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import time
+
+            def timed(fn):
+                t0 = time.perf_counter()
+                out = fn()
+                return out, time.perf_counter() - t0
+        """, "repro/experiments/cache.py")
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPL006 / RPL008 — parity registration and its resolvability
+# ---------------------------------------------------------------------------
+
+
+def _write_serial_reference(tmp_path):
+    ref = tmp_path / "repro" / "core" / "placement.py"
+    ref.parent.mkdir(parents=True, exist_ok=True)
+    ref.write_text("def greedy_placement(parts, topo):\n    return parts\n")
+
+
+class TestParityRegistration:
+    def test_unregistered_public_batch_kernel_fires(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            def solve_batch(stack):
+                return stack
+        """, "repro/experiments/solve.py")
+        assert rules_fired(findings) == {"RPL006"}
+        assert "solve_batch" in findings[0].message
+
+    def test_private_and_out_of_scope_kernels_are_exempt(self, tmp_path):
+        findings = lint_snippet(
+            tmp_path / "a", "def _solve_batch(s):\n    return s\n",
+            "repro/experiments/solve.py",
+        ) + lint_snippet(
+            tmp_path / "b", "def pack_batch(s):\n    return s\n",
+            "repro/models/packing.py",
+        )
+        assert findings == []
+
+    def test_registered_kernel_with_resolvable_serial_passes(self, tmp_path):
+        _write_serial_reference(tmp_path)
+        findings = lint_snippet(tmp_path, """
+            from repro.analysis.registry import parity_pair
+
+            @parity_pair(serial="repro.core.placement.greedy_placement", kind="bit")
+            def solve_batch(stack):
+                return stack
+        """, "repro/experiments/solve.py")
+        assert findings == []
+
+    def test_unresolvable_serial_path_fires_rpl008(self, tmp_path):
+        _write_serial_reference(tmp_path)
+        findings = lint_snippet(tmp_path, """
+            from repro.analysis.registry import parity_pair
+
+            @parity_pair(serial="repro.core.placement.renamed_away", kind="bit")
+            def solve_batch(stack):
+                return stack
+        """, "repro/experiments/solve.py")
+        assert rules_fired(findings) == {"RPL008"}
+        assert "renamed_away" in findings[0].message
+
+    def test_bad_kind_and_nonliteral_serial_fire_rpl008(self, tmp_path):
+        _write_serial_reference(tmp_path)
+        findings = lint_snippet(tmp_path, """
+            from repro.analysis.registry import parity_pair
+
+            TARGET = "repro.core.placement.greedy_placement"
+
+            @parity_pair(serial=TARGET, kind="exact")
+            def solve_batch(stack):
+                return stack
+        """, "repro/experiments/solve.py")
+        assert [f.rule for f in findings] == ["RPL008", "RPL008"]
+
+    def test_bare_decorator_without_call_fires_rpl008(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from repro.analysis.registry import parity_pair
+
+            @parity_pair
+            def solve_batch(stack):
+                return stack
+        """, "repro/experiments/solve.py")
+        assert rules_fired(findings) == {"RPL008"}
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — suppressions: round trip, malformed, stale
+# ---------------------------------------------------------------------------
+
+
+class TestSuppressions:
+    BAD = """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n){directive}
+    """
+
+    def test_reasoned_suppression_silences_the_finding(self, tmp_path):
+        findings = lint_snippet(
+            tmp_path,
+            self.BAD.format(
+                directive="  # repro-lint: disable=RPL004 perf probe, seed irrelevant"
+            ),
+            "repro/core/jitter.py",
+        )
+        assert findings == []
+
+    def test_suppression_on_comment_line_above_also_applies(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import numpy as np
+
+            def jitter(n):
+                # repro-lint: disable=RPL004 perf probe, seed irrelevant
+                return np.random.rand(n)
+        """, "repro/core/jitter.py")
+        assert findings == []
+
+    def test_missing_reason_is_malformed_and_does_not_suppress(self, tmp_path):
+        findings = lint_snippet(
+            tmp_path,
+            self.BAD.format(directive="  # repro-lint: disable=RPL004"),
+            "repro/core/jitter.py",
+        )
+        assert rules_fired(findings) == {"RPL004", "RPL007"}
+
+    def test_unknown_rule_id_is_flagged(self, tmp_path):
+        findings = lint_snippet(
+            tmp_path,
+            self.BAD.format(directive="  # repro-lint: disable=RPL999 because"),
+            "repro/core/jitter.py",
+        )
+        assert rules_fired(findings) == {"RPL004", "RPL007"}
+
+    def test_stale_suppression_is_flagged(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            def fine():  # repro-lint: disable=RPL004 nothing here draws randomness
+                return 1
+        """, "repro/core/fine.py")
+        assert rules_fired(findings) == {"RPL007"}
+        assert "stale" in findings[0].message
+
+    def test_docstring_mentioning_grammar_is_not_a_directive(self, tmp_path):
+        # regression: only tokenize COMMENT tokens parse as directives
+        findings = lint_snippet(tmp_path, '''
+            """Suppress with `# repro-lint: disable=RPL001 <reason>` inline."""
+
+            def fine():
+                return 1
+        ''', "repro/core/doc.py")
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# engine: baseline lifecycle + syntax errors
+# ---------------------------------------------------------------------------
+
+
+class TestBaseline:
+    def _finding(self, msg="m1"):
+        return Finding(path="repro/core/x.py", line=3, col=1,
+                       rule="RPL004", message=msg)
+
+    def test_round_trip_and_shrink_only_diff(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        grandfathered = [self._finding("old"), self._finding("old")]
+        write_baseline(str(path), grandfathered)
+        baseline = load_baseline(str(path))
+
+        ok = diff_vs_baseline(grandfathered, baseline)
+        assert ok.ok
+
+        regressed = diff_vs_baseline(
+            grandfathered + [self._finding("new")], baseline
+        )
+        assert [f.message for f in regressed.new] == ["new"]
+
+        fixed = diff_vs_baseline([self._finding("old")], baseline)
+        assert not fixed.ok and fixed.stale[0]["count"] == 1
+
+    def test_missing_baseline_is_empty(self, tmp_path):
+        assert load_baseline(str(tmp_path / "absent.json")) == {}
+
+    def test_unsupported_version_rejected(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        path.write_text(json.dumps({"version": 99, "findings": []}))
+        with pytest.raises(ValueError, match="version"):
+            load_baseline(str(path))
+
+    def test_syntax_error_is_a_finding_not_a_crash(self, tmp_path):
+        findings = lint_snippet(tmp_path, "def broken(:\n", "repro/core/bad.py")
+        assert rules_fired(findings) == {"RPL000"}
+
+
+# ---------------------------------------------------------------------------
+# registry + generated parity table
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    # the five pairs of the historical hand-maintained ARCHITECTURE table
+    HISTORICAL_PAIRS = {
+        "repro.experiments.placement_batch.greedy_construct_batch":
+            "repro.core.placement.greedy_placement",
+        "repro.experiments.placement_batch.torus_construct_batch":
+            "repro.core.placement.torus_quad_placement",
+        "repro.experiments.placement_batch.batch_descend":
+            "repro.core.placement.two_opt_best_move",
+        "repro.experiments.batched.simulate_batch":
+            "repro.core.simulator.simulate",
+        "repro.nocsim.batch.contended_batch":
+            "repro.nocsim.model.simulate_contended",
+    }
+
+    def test_all_historical_architecture_pairs_are_registered(self):
+        registry = load_registry()
+        for batched, serial in self.HISTORICAL_PAIRS.items():
+            assert batched in registry, f"{batched} lost its @parity_pair"
+            assert registry[batched].serial == serial
+            assert registry[batched].kind in PARITY_KINDS
+
+    def test_decorator_is_zero_cost_and_validates_inputs(self):
+        from repro.analysis import registry as reg
+
+        @parity_pair(serial="repro.core.placement.greedy_placement", kind="bit")
+        def probe_batch(x):
+            return x + 1
+
+        # the registry is process-global — drop the probe so the parity
+        # table rendered by later tests stays the committed one
+        reg._REGISTRY.pop(probe_batch.__parity_pair__.batched)
+        assert probe_batch(1) == 2
+        assert probe_batch.__parity_pair__.kind == "bit"
+        with pytest.raises(ValueError, match="kind"):
+            parity_pair(serial="repro.core.x.y", kind="exact")
+        with pytest.raises(ValueError, match="dotted"):
+            parity_pair(serial="bare", kind="bit")
+
+
+class TestParityTable:
+    FAKE = {
+        "repro.pkg.b_batch": ParityEntry(
+            batched="repro.pkg.b_batch", serial="repro.core.b", kind="bit",
+            note="same tie-breaks",
+        ),
+        "repro.pkg.a_batch": ParityEntry(
+            batched="repro.pkg.a_batch", serial="repro.core.a", kind="rel",
+            tol=1e-5,
+        ),
+    }
+
+    def test_render_sorts_rows_and_formats_contracts(self):
+        table = parity_table.render_parity_table(self.FAKE)
+        lines = table.splitlines()
+        assert lines[0].startswith("| batched kernel ")
+        assert "`repro.pkg.a_batch`" in lines[2] and "within 1e-05 relative" in lines[2]
+        assert "`repro.pkg.b_batch`" in lines[3]
+        assert "**bit-identical** (numpy backend) — same tie-breaks" in lines[3]
+
+    def test_committed_table_is_fresh(self):
+        doc = str(REPO_ROOT / "docs" / "ARCHITECTURE.md")
+        assert parity_table.main(["--check", "--doc", doc]) == 0
+
+    def test_check_fails_on_stale_doc_and_missing_markers(self, tmp_path, capsys):
+        doc = tmp_path / "ARCH.md"
+        doc.write_text(
+            f"intro\n{parity_table.MARK_BEGIN}\nstale rows\n{parity_table.MARK_END}\nout\n"
+        )
+        assert parity_table.main(["--check", "--doc", str(doc)]) == 1
+        assert "STALE" in capsys.readouterr().err
+
+        assert parity_table.main(["--doc", str(doc)]) == 0  # regenerate…
+        assert parity_table.main(["--check", "--doc", str(doc)]) == 0  # …fresh
+
+        bare = tmp_path / "bare.md"
+        bare.write_text("no markers here\n")
+        assert parity_table.main(["--check", "--doc", str(bare)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the real tree + the ISSUE acceptance mutations
+# ---------------------------------------------------------------------------
+
+
+def _copy_repro_tree(tmp_path):
+    dst = tmp_path / "repro"
+    shutil.copytree(SRC / "repro", dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+class TestRealTree:
+    def test_src_lints_clean_against_committed_baseline(self):
+        rc = lint_main([str(SRC), "--check-baseline", "--baseline", str(BASELINE)])
+        assert rc == 0
+
+    def test_committed_baseline_is_empty(self):
+        payload = json.loads(BASELINE.read_text())
+        assert payload == {"version": 1, "findings": []}
+
+    def test_every_rule_has_id_and_title(self):
+        catalog = rule_catalog()
+        assert len(catalog) == len(ALL_RULES) == 8
+        assert all(rid.startswith("RPL") for rid in catalog)
+
+    def test_deleting_a_parity_pair_decorator_trips_rpl006(self, tmp_path):
+        tree = _copy_repro_tree(tmp_path)
+        target = tree / "experiments" / "placement_batch.py"
+        text = target.read_text()
+        idx_def = text.index("def repair_batch(")
+        idx_dec = text.rindex("@parity_pair(", 0, idx_def)
+        target.write_text(text[:idx_dec] + text[idx_def:])
+
+        findings = lint_paths([str(tmp_path)]).findings
+        assert [f.rule for f in findings] == ["RPL006"]
+        assert "repair_batch" in findings[0].message
+
+    def test_injecting_float_tracer_into_scan_body_trips_rpl001(self, tmp_path):
+        tree = _copy_repro_tree(tmp_path)
+        target = tree / "nocsim" / "batch.py"
+        text = target.read_text()
+        anchor = "            arrived = backlog + injected\n"
+        assert anchor in text
+        target.write_text(text.replace(
+            anchor, anchor + "            leak = float(backlog)\n", 1
+        ))
+
+        findings = lint_paths([str(tmp_path)]).findings
+        assert [f.rule for f in findings] == ["RPL001"]
+        assert "float" in findings[0].message
+
+    def test_cli_json_format_and_list_rules(self, tmp_path, capsys):
+        bad = tmp_path / "repro" / "core" / "bad.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("import numpy as np\nx = np.random.rand(3)\n")
+        rc = lint_main([str(tmp_path), "--format", "json"])
+        out = json.loads(capsys.readouterr().out)
+        assert rc == 1 and not out["ok"]
+        assert out["findings"][0]["rule"] == "RPL004"
+
+        assert lint_main(["--list-rules"]) == 0
+        listed = capsys.readouterr().out
+        assert "RPL001" in listed and "RPL008" in listed

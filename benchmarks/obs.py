@@ -1,0 +1,111 @@
+"""§Observability rows: what the obs layer itself costs.
+
+  * obs/span_{disabled,enabled} — per-span cost with the tracer off (the
+    steady-state price every pipeline stage pays: two clock reads) and on
+    (clock reads + a locked buffer append).
+  * obs/sweep_traced — the warm-cache mini sweep with tracing AND the NoC
+    flight recorder attached vs the plain run; `derived` carries the
+    overhead percentage.  The recorder re-runs the routing arms on the
+    numpy reference stepper, so this is the all-in price of `--trace-out`,
+    not just span bookkeeping.
+  * obs/recorder_depth{N} — capture throughput at ring depth N with the
+    retained/dropped accounting and the resident-sample footprint, the
+    memory axis of `FlightRecorder(max_windows=...)`.
+"""
+import tempfile
+
+import numpy as np
+
+from repro import obs
+from repro.experiments.grid import GRIDS
+from repro.experiments.sweep import run_sweep
+
+from benchmarks.common import emit, timed
+
+SPAN_BATCH = 2_000
+
+
+def _span_batch():
+    for _ in range(SPAN_BATCH):
+        with obs.span("bench.nop", cat="bench"):
+            pass
+
+
+def _span_rows():
+    tracer = obs.get_tracer()
+    obs.disable_tracing()
+    _, us_off = timed(_span_batch)
+    obs.enable_tracing()
+    tracer.reset()
+    _, us_on = timed(_span_batch)
+    obs.disable_tracing()
+    tracer.reset()
+    emit("obs/span_disabled", us_off / SPAN_BATCH,
+         f"per_span_ns={us_off / SPAN_BATCH * 1e3:.0f}")
+    emit("obs/span_enabled", us_on / SPAN_BATCH,
+         f"per_span_ns={us_on / SPAN_BATCH * 1e3:.0f};"
+         f"vs_disabled={us_on / max(us_off, 1e-9):.2f}x")
+
+
+def _sweep_rows():
+    cache = tempfile.mkdtemp(prefix="bench_obs_")
+    grid = GRIDS["mini"]
+    run_sweep(grid, cache_dir=cache)  # warm the content-hash cache
+    _, us_plain = timed(run_sweep, grid, cache_dir=cache)
+
+    tracer = obs.get_tracer()
+    obs.enable_tracing()
+
+    def traced():
+        tracer.reset()
+        return run_sweep(grid, cache_dir=cache, recorder=obs.FlightRecorder())
+
+    _, us_traced = timed(traced)
+    obs.disable_tracing()
+    tracer.reset()
+    overhead = (us_traced / max(us_plain, 1e-9) - 1.0) * 100.0
+    emit("obs/sweep_plain", us_plain, f"ms={us_plain / 1e3:.1f}")
+    emit("obs/sweep_traced", us_traced,
+         f"ms={us_traced / 1e3:.1f};overhead_pct={overhead:.1f}")
+
+
+class _Sched:
+    """The attributes `FlightRecorder.capture_batch` reads."""
+
+    def __init__(self, num_links, num_windows, window_s=1e-6):
+        self.window_s = window_s
+        self.num_links = num_links
+        share = np.zeros((num_windows, 3))
+        share[:, 0] = 1.0
+        self.window_share = share
+
+
+def _recorder_rows():
+    total, chunk, links, configs = 4_096, 256, 16, 4
+    serviced = np.random.default_rng(0).random((chunk, configs, links))
+    backlog = serviced * 0.5
+    scheds = [_Sched(links, chunk) for _ in range(configs)]
+    for depth in (128, 512, 2_048):
+        def capture(depth=depth):
+            rec = obs.FlightRecorder(max_windows=depth)
+            for start in range(0, total, chunk):
+                rec.capture_batch(scheds, serviced, backlog, start_window=start)
+            return rec
+
+        rec, us = timed(capture)
+        summ = rec.summary()
+        retained = sum(t["windows_retained"] for t in summ["tracks"])
+        # resident samples: retained windows × links × (util + backlog) floats
+        approx_kb = retained * links * 2 * 8 / 1024.0
+        emit(
+            f"obs/recorder_depth{depth}",
+            us / total,
+            f"windows={total};retained={retained};"
+            f"dropped={summ['dropped_windows']};approx_kb={approx_kb:.0f}",
+        )
+
+
+def run():
+    _span_rows()
+    _sweep_rows()
+    _recorder_rows()

@@ -27,6 +27,7 @@ MODULES = (
     "energy",
     "contention",
     "kernels_bench",
+    "obs",
 )
 
 

@@ -18,6 +18,7 @@ report every violation they see.
 | RPL006 | every public batched kernel carries `@parity_pair` |
 | RPL007 | suppression hygiene (engine-enforced: reason required, no stale/unknown) |
 | RPL008 | `@parity_pair` declarations resolve: serial path exists, kind valid |
+| RPL009 | one timing idiom: raw clock reads outside `repro/obs/` go through obs |
 """
 from __future__ import annotations
 
@@ -640,6 +641,47 @@ class ParityReferenceRule(Rule):
                 )
 
 
+class TimingIdiomRule(Rule):
+    """RPL009 — one timing idiom in the tree: every duration is measured
+    off `repro.obs`'s clock (`obs.now_s`/`obs.now_ns`/`obs.span`).  A raw
+    `time.perf_counter()` elsewhere forks the clock — it bypasses the
+    deterministic-clock mode (`REPRO_OBS_DETERMINISTIC=1`) that the
+    recording-on ≡ recording-off artifact byte-identity tests rely on, and
+    its durations never reach the trace/metrics exports.  `time.sleep` is
+    not a clock read and stays allowed."""
+
+    rule_id = "RPL009"
+    title = "raw clock read outside repro.obs (use obs.now_s/obs.span)"
+
+    _RAW_CLOCKS = frozenset(
+        {
+            "time.perf_counter",
+            "time.perf_counter_ns",
+            "time.monotonic",
+            "time.monotonic_ns",
+            "time.process_time",
+            "time.process_time_ns",
+            "time.thread_time",
+            "time.thread_time_ns",
+        }
+    )
+
+    def check(self, module: "ModuleUnit") -> Iterator["Finding"]:
+        if _in_package(module.relpath, "obs"):
+            return  # the clock's one owner
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in self._RAW_CLOCKS:
+                yield self.finding(
+                    module, node,
+                    f"`{name}` bypasses the obs clock — use `obs.now_s()` or "
+                    "a `with obs.span(...)` block so timings honor the "
+                    "deterministic-clock mode and reach the exporters",
+                )
+
+
 ALL_RULES: tuple[type[Rule], ...] = (
     TracerLeakRule,
     NondeterministicReductionRule,
@@ -649,6 +691,7 @@ ALL_RULES: tuple[type[Rule], ...] = (
     ParityRegistrationRule,
     SuppressionHygieneRule,
     ParityReferenceRule,
+    TimingIdiomRule,
 )
 
 

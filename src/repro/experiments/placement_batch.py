@@ -68,9 +68,10 @@ adversarial instance where a single steepest path lands high.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
+
+from repro import obs
 
 from repro.core.noc import Topology
 from repro.core.partition import Partition
@@ -976,14 +977,14 @@ def place_batch(  # repro-lint: disable=RPL006 front-end dispatcher, not a kerne
     # Torus-native constructive configs: one stacked layout assembly per
     # (n, S) shape group, no descent — the search-time saving §Torus reports.
     for (_n, _s), idxs in torus_groups.items():
-        t0 = time.perf_counter()
+        t0 = obs.now_s()
         sites_out, cons_backend = torus_construct_batch(
             [weights_all[i] for i in idxs],
             [topologies[i] for i in idxs],
             methods=[resolved[i] for i in idxs],
             backend=backend,
         )
-        stats.construct_s += time.perf_counter() - t0
+        stats.construct_s += obs.now_s() - t0
         backends_used.add(cons_backend)
         stats.backend = ",".join(sorted(backends_used))
         stats.torus_constructed += len(idxs)
@@ -993,7 +994,7 @@ def place_batch(  # repro-lint: disable=RPL006 front-end dispatcher, not a kerne
                 topologies[i], np.asarray(s_arr, dtype=np.int64), resolved[i]
             )
     for (n, _s), idxs in groups.items():
-        t_group = time.perf_counter()
+        t_group = obs.now_s()
         # Initial layouts: quad configs use the O(n) constructive tiling per
         # config; greedy configs run ONE stacked argmax-insertion program for
         # the whole group (the former per-config greedy_placement loop).
@@ -1046,5 +1047,5 @@ def place_batch(  # repro-lint: disable=RPL006 front-end dispatcher, not a kerne
             if i not in best_h or h < best_h[i]:
                 best_h[i] = h
                 results[i] = pl
-        stats.search_s += time.perf_counter() - t_group
+        stats.search_s += obs.now_s() - t_group
     return results, stats  # type: ignore[return-value]

@@ -16,7 +16,8 @@ import json
 import os
 
 from repro.core.simulator import SimParams
-from repro.experiments.sweep import SweepResult, figure_comparisons
+from repro.experiments.sweep import SweepResult, figure_comparisons, metrics_snapshot_for
+from repro.obs.metrics import series_value
 
 __all__ = [
     "normalize_dryrun_record",
@@ -229,7 +230,20 @@ def _artifact_section(title: str, recs: list[dict], table: str, cmd: str) -> str
 
 
 def _perf_section(sweep: SweepResult, perf_recs: list[dict]) -> str:
-    t = sweep.timings
+    # §Perf renders FROM the obs metrics snapshot (the one `run_sweep`
+    # attached, or one rebuilt for deserialized results): the stage-time
+    # table and the cache line below read `sweep.stage_seconds` /
+    # `cache.events` series, so the report and `--metrics-out` can never
+    # disagree.  `sweep.timings` stays only as the payload serialization.
+    snap = metrics_snapshot_for(sweep)
+    gname = sweep.grid.name
+
+    def t_get(stage: str):
+        return series_value(snap, "sweep.stage_seconds", grid=gname, stage=stage)
+
+    def cache_ev(kind: str) -> int:
+        return int(series_value(snap, "cache.events", grid=gname, kind=kind) or 0)
+
     ps = sweep.placement_stats or {}
     lines = [
         "## §Perf",
@@ -248,25 +262,25 @@ def _perf_section(sweep: SweepResult, perf_recs: list[dict]) -> str:
         "",
         "| stage | seconds |",
         "|---|---|",
-        f"| graph generation | {t['graphs_s']:.3f} |",
-        f"| algorithm tracing (content-hash cached) | {t['trace_s']:.3f} |",
-        f"| partition + traffic matrices | {t['partition_traffic_s']:.3f} |",
+        f"| graph generation | {t_get('graphs'):.3f} |",
+        f"| algorithm tracing (content-hash cached) | {t_get('trace'):.3f} |",
+        f"| partition + traffic matrices | {t_get('partition_traffic'):.3f} |",
         f"| **batched placement search ({ps.get('batched_configs', 0)} searched "
         f"+ {ps.get('serial_configs', 0)} constructive configs)** | "
-        f"**{t['placement_s']:.4f}** |",
+        f"**{t_get('placement'):.4f}** |",
     ]
-    if t.get("placement_serial_s"):
+    if t_get("placement_serial"):
         lines.append(
-            f"| serial per-config `place` loop it replaces | {t['placement_serial_s']:.4f} |"
+            f"| serial per-config `place` loop it replaces | {t_get('placement_serial'):.4f} |"
         )
     lines.append(
-        f"| **batched evaluation (all configs)** | **{t['batched_eval_s']:.4f}** |"
+        f"| **batched evaluation (all configs)** | **{t_get('batched_eval'):.4f}** |"
     )
-    if t.get("serial_eval_s"):
-        lines.append(f"| serial per-config `simulate` loop it replaces | {t['serial_eval_s']:.4f} |")
-    lines.append(f"| total | {t['total_s']:.2f} |")
-    if t.get("placement_serial_s"):
-        pratio = t["placement_serial_s"] / max(t["placement_s"], 1e-12)
+    if t_get("serial_eval"):
+        lines.append(f"| serial per-config `simulate` loop it replaces | {t_get('serial_eval'):.4f} |")
+    lines.append(f"| total | {t_get('total'):.2f} |")
+    if t_get("placement_serial"):
+        pratio = t_get("placement_serial") / max(t_get("placement"), 1e-12)
         worse = ps.get("h_worse_than_serial_configs", 0)
         lines += [
             "",
@@ -277,19 +291,18 @@ def _perf_section(sweep: SweepResult, perf_recs: list[dict]) -> str:
             f" (max H ratio {ps.get('h_vs_serial_max_ratio', 1.0):.4f};"
             " parity asserted in `tests/test_placement_batch.py`).",
         ]
-    if t.get("serial_eval_s"):
-        ratio = t["serial_eval_s"] / max(t["batched_eval_s"], 1e-12)
+    if t_get("serial_eval"):
+        ratio = t_get("serial_eval") / max(t_get("batched_eval"), 1e-12)
         lines += [
             "",
             f"Batched evaluation is **{ratio:.1f}× faster** than the serial"
             " one-config-at-a-time loop on this grid (identical results to fp"
             " tolerance; see `tests/test_experiments_sweep.py`).",
         ]
-    cs = sweep.cache_stats
     lines += [
         "",
-        f"Trace cache: {cs['trace_hits']} hits / {cs['trace_misses']} misses; "
-        f"traffic cache: {cs['traffic_hits']} hits / {cs['traffic_misses']} misses "
+        f"Trace cache: {cache_ev('trace_hits')} hits / {cache_ev('trace_misses')} misses; "
+        f"traffic cache: {cache_ev('traffic_hits')} hits / {cache_ev('traffic_misses')} misses "
         "(a repeated sweep re-traces nothing).",
         "",
         "### Dry-run variant hillclimb (`python -m repro.launch.perf`)",

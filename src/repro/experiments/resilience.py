@@ -51,8 +51,16 @@ from repro.faults.repair import evacuate_placement, repair_descend, repair_place
 from repro.faults.routing import degraded_distance_matrix
 from repro.graph.generators import table2_workloads
 from repro.nocsim.model import NocSimParams
+from repro.obs import metrics as obs_metrics
+from repro.obs import span
 
-__all__ = ["ResilienceResult", "run_resilience", "unit_ids", "fault_seed"]
+__all__ = [
+    "ResilienceResult",
+    "run_resilience",
+    "unit_ids",
+    "fault_seed",
+    "register_resilience_metrics",
+]
 
 # Repair experiment knobs: descent budgets reported per fault-free unit, and
 # the fraction of routers the over-provisioned repair grid adds as spares.
@@ -103,6 +111,10 @@ class ResilienceResult:
     noc_params: NocSimParams
     # Cache stats stay OUT of to_dict(): a resumed run traces less than an
     # uninterrupted one, and the artifact must be byte-identical either way.
+    # The rule lives in the metrics layer now — `register_resilience_metrics`
+    # files them under the snapshot's `non_comparable` namespace (alongside
+    # resumed/computed unit counts), so the byte-comparison exclusion is
+    # structural rather than per-caller convention.
     cache_stats: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
@@ -221,6 +233,7 @@ def run_resilience(
     records: list[dict] = []
     repair_rows: list[dict] = []
     parity_max: float | None = None
+    units_resumed = units_computed = 0
 
     for w_name in grid.workloads:
         g = graphs[w_name]
@@ -237,6 +250,7 @@ def run_resilience(
                             p = rec["record"].get("backend_parity_rel")
                             if p is not None:
                                 parity_max = max(parity_max or 0.0, p)
+                            units_resumed += 1
                             say(f"[faults:{grid.name}] {uid} (journaled)")
                             continue
                         if trace is None:
@@ -244,7 +258,10 @@ def run_resilience(
                                 g, alg, max_iterations=TRACE_ITERS.get(alg, DEFAULT_TRACE_ITERS)
                             )
                         try:
-                            with unit_timeout(unit_timeout_s):
+                            with span(
+                                "faults.unit", cat="faults", unit=uid,
+                                fault_rate=rate, parts=parts,
+                            ) as usp, unit_timeout(unit_timeout_s):
                                 rec, unit_repair, parity = _run_unit(
                                     uid,
                                     g,
@@ -269,6 +286,10 @@ def run_resilience(
                                 journal.quarantine_unit(uid, e)
                             say(f"[faults:{grid.name}] {uid} QUARANTINED: {e}")
                             continue
+                        usp.annotate(
+                            num_dead_links=rec["num_dead_links"], win=rec["win"]
+                        )
+                        units_computed += 1
                         if parity is not None:
                             parity_max = max(parity_max or 0.0, parity)
                         records.append(rec)
@@ -295,7 +316,34 @@ def run_resilience(
     )
     if journal is not None:
         journal.close()
+    register_resilience_metrics(result, resumed=units_resumed, computed=units_computed)
     return result
+
+
+def register_resilience_metrics(
+    result: ResilienceResult, *, resumed: int = 0, computed: int = 0, reg=None
+) -> None:
+    """File the faults runner's counts with the metrics registry.
+
+    Namespace placement IS the byte-comparison rule (see `obs.metrics`):
+    unit totals and the quarantine count are pure functions of the grid and
+    appear in the committed artifact, so they are `comparable`; cache
+    hit/miss/retry events and the resumed-vs-computed split depend on how
+    many times the run was interrupted and are `non_comparable`."""
+    reg = reg if reg is not None else obs_metrics.get_registry()
+    gname = result.grid.name
+    units = reg.gauge("faults.units")
+    units.set(len(result.records), grid=gname, kind="completed")
+    units.set(len(result.quarantined), grid=gname, kind="quarantined")
+    units.set(len(result.repair), grid=gname, kind="repair_rows")
+    runs = reg.counter("faults.unit_runs", non_comparable=True)
+    if resumed:
+        runs.inc(resumed, grid=gname, kind="resumed")
+    if computed:
+        runs.inc(computed, grid=gname, kind="computed")
+    cache_events = reg.counter("cache.events", non_comparable=True)
+    for k, v in result.cache_stats.items():
+        cache_events.inc(v, grid=gname, kind=k)
 
 
 def _run_unit(

@@ -31,6 +31,7 @@ import json
 import os
 import signal
 
+from repro import obs
 from repro.experiments.grid import GRIDS, grid_by_name
 from repro.experiments.journal import SweepJournal, flush_all_journals
 from repro.experiments.report import (
@@ -40,6 +41,33 @@ from repro.experiments.report import (
     write_outputs,
 )
 from repro.experiments.sweep import run_sweep
+
+
+def _export_obs(args, recorder) -> None:
+    """Write the observability outputs (after ALL sweep artifacts are on
+    disk: trace/metrics files are observability products, never inputs to
+    the byte-compared pipeline).  Flight-recorder ring truncation is
+    reported, never silent."""
+    if args.trace_out:
+        extra = recorder.counter_events_json() if recorder is not None else ()
+        obs.export_chrome_trace(args.trace_out, extra_events=extra)
+        wrote = [args.trace_out]
+        if recorder is not None and recorder.summary()["tracks"]:
+            heat_path = os.path.splitext(args.trace_out)[0] + ".heatmap.json"
+            recorder.write_heatmap(heat_path)
+            wrote.append(heat_path)
+        if not args.quiet:
+            msg = f"[obs] wrote {' and '.join(wrote)}"
+            if recorder is not None and recorder.dropped_windows:
+                msg += (
+                    f"; flight recorder dropped {recorder.dropped_windows}"
+                    " window(s) (ring full — raise FlightRecorder max_windows)"
+                )
+            print(msg)
+    if args.metrics_out:
+        obs.metrics.write_snapshot(args.metrics_out)
+        if not args.quiet:
+            print(f"[obs] wrote {args.metrics_out}")
 
 
 def _run_faults_grid(grid, args) -> int:
@@ -140,26 +168,49 @@ def main(argv: list[str] | None = None) -> int:
         help="per-unit wall-time bound in seconds for faults grids; an"
         " over-budget unit is quarantined, not fatal (0 = unbounded)",
     )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="write a Chrome-trace/Perfetto JSON (pipeline spans + NoC"
+        " flight-recorder counter tracks; open in ui.perfetto.dev); a"
+        " <stem>.heatmap.json per-phase link-utilization artifact rides"
+        " along when the recorder captured any track",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        help="write the obs metrics snapshot JSON"
+        " (comparable/non_comparable namespaces; schemas/metrics.schema.json)",
+    )
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    recorder = None
+    if args.trace_out:
+        obs.enable_tracing()
+        recorder = obs.FlightRecorder()
 
     grid = grid_by_name(args.grid, scale=args.scale)
     if grid.fault_rates is not None:
         try:
-            return _run_faults_grid(grid, args)
+            rc = _run_faults_grid(grid, args)
         except KeyboardInterrupt:
             n = flush_all_journals()
             print(f"[sweep:{grid.name}] interrupted; flushed {n} journal(s) — resume with --resume")
             return 130
+        _export_obs(args, recorder)
+        return rc
     try:
-        sweep = run_sweep(
-            grid,
-            cache_dir=None if args.no_cache else args.cache_dir,
-            backend=args.backend,
-            measure_serial=not args.no_serial_check,
-            placement_restarts=args.restarts,
-            progress=None if args.quiet else print,
-        )
+        with obs.span("pipeline.sweep", grid=grid.name, backend=args.backend):
+            sweep = run_sweep(
+                grid,
+                cache_dir=None if args.no_cache else args.cache_dir,
+                backend=args.backend,
+                measure_serial=not args.no_serial_check,
+                placement_restarts=args.restarts,
+                progress=None if args.quiet else print,
+                recorder=recorder,
+            )
     except KeyboardInterrupt:
         # The trace/shard cache is written atomically as the sweep goes, so
         # an interrupted run resumes by simply re-running: completed stages
@@ -167,6 +218,8 @@ def main(argv: list[str] | None = None) -> int:
         flush_all_journals()
         print(f"[sweep:{grid.name}] interrupted; partial cache is on disk — just re-run")
         return 130
+    report_sp = obs.span("pipeline.report", grid=grid.name)
+    report_sp.__enter__()
     artifact = None
     if args.grid in RENDERABLE_SWEEP_GRIDS:
         artifact = save_sweep_artifact(sweep, args.sweeps_dir)
@@ -197,6 +250,8 @@ def main(argv: list[str] | None = None) -> int:
         wrote += [md_path, json_path]
     elif args.json is not None:
         wrote.append(write_bench_json(sweep, args.json))
+    report_sp.__exit__(None, None, None)
+    _export_obs(args, recorder)
     if not args.quiet:
         n = len(sweep.records)
         if wrote:

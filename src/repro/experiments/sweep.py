@@ -16,12 +16,11 @@ the H-parity guarantee on real sweep shapes.
 from __future__ import annotations
 
 import dataclasses
-import resource
-import time
 from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.core.degree import out_degrees, skew_stats
 from repro.core.placement import Placement, auto_mesh_for_parts, place
 from repro.core.simulator import SimParams, SimResult
@@ -30,21 +29,24 @@ from repro.experiments.cache import SweepCache
 from repro.experiments.grid import GridSpec, SweepConfig
 from repro.experiments.placement_batch import place_batch
 from repro.graph.generators import table2_workloads
+from repro.obs import peak_rss_mb, span
 
-__all__ = ["SweepRecord", "SweepResult", "run_sweep", "figure_comparisons", "workload_stats"]
+__all__ = [
+    "SweepRecord",
+    "SweepResult",
+    "run_sweep",
+    "figure_comparisons",
+    "workload_stats",
+    "register_sweep_metrics",
+    "metrics_snapshot_for",
+    "peak_rss_mb",
+]
 
 # Trace length per algorithm (same budget as benchmarks/): PageRank converges
 # by L1 delta well before 40 sweeps at these scales; BFS/SSSP stop on an
 # empty frontier.
 TRACE_ITERS = {"pagerank": 40}
 DEFAULT_TRACE_ITERS = 200
-
-
-def peak_rss_mb() -> float:
-    """Process-lifetime peak resident set in MiB (`ru_maxrss` is KiB on
-    Linux).  Monotone, so sampling it after each sweep stage yields the
-    running peak *through* that stage — the §Scale memory column."""
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +94,11 @@ class SweepResult:
     # per config × routing-arm contended records + backend parity; None for
     # grids without the contention pass.
     contention: dict | None = None
+    # obs metrics snapshot for THIS sweep (stage timings, cache events,
+    # placement stats, saturation bounds).  Deliberately absent from
+    # `to_dict()`: its non_comparable namespace carries wall-clock, and the
+    # sweep payload is byte-compared.  `report.py` renders §Perf from it.
+    metrics_snapshot: dict | None = None
 
     def to_dict(self) -> dict:
         return {
@@ -135,6 +142,7 @@ def run_sweep(
     placement_restarts: int = 0,
     graphs: dict[str, object] | None = None,
     progress: Callable[[str], None] | None = None,
+    recorder=None,
 ) -> SweepResult:
     """Run every configuration of `grid` and return per-config records.
 
@@ -150,8 +158,13 @@ def run_sweep(
     `graphs` supplies pre-built workload graphs (name → HostGraph) so callers
     that already generated them (benchmarks/common.py) don't pay generation
     twice; the caller is responsible for them matching `grid.scale`/`seed`.
+    `recorder` (an `obs.FlightRecorder`) opts into the NoC flight-recorder
+    pass: every routable config replayed through the windowed simulator with
+    per-window link state captured — run strictly AFTER every payload field
+    (timings, memory, records) is finalized, so recording cannot perturb the
+    byte-compared artifact (tested contract).
     """
-    t_start = time.perf_counter()
+    t_start = obs.now_s()
     say = progress or (lambda _msg: None)
     if cache is None:
         cache = SweepCache(cache_dir)
@@ -163,86 +176,88 @@ def run_sweep(
     backend = resolve_backend(backend, problem_size)
 
     say(f"[sweep:{grid.name}] {len(configs)} configs, backend={backend}")
-    t0 = time.perf_counter()
     memory = {"start_mb": peak_rss_mb()}
     # Graphs are keyed (workload, scale): single-scale grids have one scale
     # for every config, multi-scale grids (`grid.scales`) regenerate each
     # workload per scale.  A caller-supplied `graphs` dict (name → graph)
     # serves every scale — its single-scale contract is documented above.
-    used_pairs = sorted({(c.workload, c.scale) for c in configs})
-    used_names = tuple(sorted({w for w, _ in used_pairs}))
-    gmap: dict[tuple[str, float], object] = {}
-    if graphs is not None:
-        missing = set(used_names) - graphs.keys()
-        if missing:
-            raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
-        gmap = {(w, s): graphs[w] for w, s in used_pairs}
-    else:
-        for s in sorted({s for _, s in used_pairs}):
-            names = tuple(w for w, s2 in used_pairs if s2 == s)
-            gen = table2_workloads(scale=s, seed=grid.seed, names=names)
-            missing = set(names) - gen.keys()
+    with span("sweep.graphs", cat="sweep", grid=grid.name) as sp:
+        used_pairs = sorted({(c.workload, c.scale) for c in configs})
+        used_names = tuple(sorted({w for w, _ in used_pairs}))
+        gmap: dict[tuple[str, float], object] = {}
+        if graphs is not None:
+            missing = set(used_names) - graphs.keys()
             if missing:
                 raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
-            for w in names:
-                gmap[(w, s)] = gen[w]
-    multi_scale = grid.scales is not None
-    wl_stats = {
-        (f"{w}@s{s:g}" if multi_scale else w): workload_stats(w, g)
-        for (w, s), g in gmap.items()
-    }
-    t_graphs = time.perf_counter() - t0
+            gmap = {(w, s): graphs[w] for w, s in used_pairs}
+        else:
+            for s in sorted({s for _, s in used_pairs}):
+                names = tuple(w for w, s2 in used_pairs if s2 == s)
+                gen = table2_workloads(scale=s, seed=grid.seed, names=names)
+                missing = set(names) - gen.keys()
+                if missing:
+                    raise ValueError(f"unknown workloads in grid: {sorted(missing)}")
+                for w in names:
+                    gmap[(w, s)] = gen[w]
+        multi_scale = grid.scales is not None
+        wl_stats = {
+            (f"{w}@s{s:g}" if multi_scale else w): workload_stats(w, g)
+            for (w, s), g in gmap.items()
+        }
+        sp.annotate(workloads=len(gmap))
+    t_graphs = sp.duration_s
     memory["graphs_mb"] = peak_rss_mb()
 
     # ---- traces (content-hash cached; one per workload × algorithm × scale) -
-    t0 = time.perf_counter()
-    traces = {}
-    for w, a, s in sorted({(c.workload, c.algorithm, c.scale) for c in configs}):
-        traces[(w, a, s)] = cache.trace(
-            gmap[(w, s)], a, max_iterations=TRACE_ITERS.get(a, DEFAULT_TRACE_ITERS)
-        )
-        say(f"[sweep:{grid.name}] traced {w}/{a}@s{s:g}: {traces[(w, a, s)].num_iterations} iters")
-    t_trace = time.perf_counter() - t0
+    with span("sweep.trace", cat="sweep", grid=grid.name) as sp:
+        traces = {}
+        for w, a, s in sorted({(c.workload, c.algorithm, c.scale) for c in configs}):
+            traces[(w, a, s)] = cache.trace(
+                gmap[(w, s)], a, max_iterations=TRACE_ITERS.get(a, DEFAULT_TRACE_ITERS)
+            )
+            say(f"[sweep:{grid.name}] traced {w}/{a}@s{s:g}: {traces[(w, a, s)].num_iterations} iters")
+        sp.annotate(traces=len(traces))
+    t_trace = sp.duration_s
     memory["trace_mb"] = peak_rss_mb()
 
     # ---- per-config partition → traffic ------------------------------------
-    t0 = time.perf_counter()
-    partitions: dict[tuple, object] = {}
-    traffics, parts_list, topologies, per_config_us = [], [], [], []
-    for c in configs:
-        tc0 = time.perf_counter()
-        g = gmap[(c.workload, c.scale)]
-        pkey = (c.workload, c.scale, c.partitioner, c.num_parts)
-        part = partitions.get(pkey)
-        if part is None:
-            part = partitions[pkey] = cache.partition(g, c.partitioner, c.num_parts)
-        traffics.append(
-            cache.traffic(
-                g,
-                part,
-                traces[(c.workload, c.algorithm, c.scale)],
-                layout="dense" if grid.traffic_edge_block is None else "auto",
-                edge_block=grid.traffic_edge_block,
+    with span("sweep.partition_traffic", cat="sweep", grid=grid.name, configs=len(configs)) as sp:
+        partitions: dict[tuple, object] = {}
+        traffics, parts_list, topologies, per_config_us = [], [], [], []
+        for c in configs:
+            tc0 = obs.now_s()
+            g = gmap[(c.workload, c.scale)]
+            pkey = (c.workload, c.scale, c.partitioner, c.num_parts)
+            part = partitions.get(pkey)
+            if part is None:
+                part = partitions[pkey] = cache.partition(g, c.partitioner, c.num_parts)
+            traffics.append(
+                cache.traffic(
+                    g,
+                    part,
+                    traces[(c.workload, c.algorithm, c.scale)],
+                    layout="dense" if grid.traffic_edge_block is None else "auto",
+                    edge_block=grid.traffic_edge_block,
+                )
             )
-        )
-        parts_list.append(part)
-        topologies.append(auto_mesh_for_parts(c.num_parts, c.topology))
-        per_config_us.append((time.perf_counter() - tc0) * 1e6)
-    t_pt = time.perf_counter() - t0
+            parts_list.append(part)
+            topologies.append(auto_mesh_for_parts(c.num_parts, c.topology))
+            per_config_us.append((obs.now_s() - tc0) * 1e6)
+    t_pt = sp.duration_s
     memory["partition_traffic_mb"] = peak_rss_mb()
 
     # ---- batched placement search (the second vectorized hot path) ---------
-    t0 = time.perf_counter()
-    placements, pstats = place_batch(
-        traffics,
-        parts_list,
-        topologies,
-        methods=[c.placement for c in configs],
-        seeds=[c.seed for c in configs],
-        restarts=placement_restarts,
-        backend=backend,
-    )
-    t_placement = time.perf_counter() - t0
+    with span("sweep.placement", cat="sweep", grid=grid.name) as sp:
+        placements, pstats = place_batch(
+            traffics,
+            parts_list,
+            topologies,
+            methods=[c.placement for c in configs],
+            seeds=[c.seed for c in configs],
+            restarts=placement_restarts,
+            backend=backend,
+        )
+    t_placement = sp.duration_s
     memory["placement_mb"] = peak_rss_mb()
     placement_stats = pstats.as_dict()
     say(
@@ -253,12 +268,12 @@ def run_sweep(
     )
     t_placement_serial = None
     if measure_serial and configs:
-        t0 = time.perf_counter()
-        serial_placements = [
-            place(t, p, topo, method=c.placement, seed=c.seed)
-            for c, t, p, topo in zip(configs, traffics, parts_list, topologies)
-        ]
-        t_placement_serial = time.perf_counter() - t0
+        with span("sweep.placement_serial", cat="sweep", grid=grid.name) as sp:
+            serial_placements = [
+                place(t, p, topo, method=c.placement, seed=c.seed)
+                for c, t, p, topo in zip(configs, traffics, parts_list, topologies)
+            ]
+        t_placement_serial = sp.duration_s
         # H-parity record AND structural guarantee: steepest descent and the
         # randomized serial search converge to different local optima of the
         # same neighbourhood, so neither dominates by construction — since
@@ -288,22 +303,22 @@ def run_sweep(
     iters = np.array(
         [traces[(c.workload, c.algorithm, c.scale)].num_iterations for c in configs]
     )
-    t0 = time.perf_counter()
-    results = simulate_batch(
-        traffics, placements, params=params, num_iterations=iters, backend=backend
-    )
-    t_batched = time.perf_counter() - t0
+    with span("sweep.simulate", cat="sweep", grid=grid.name, pass_="warmup") as sp:
+        results = simulate_batch(
+            traffics, placements, params=params, num_iterations=iters, backend=backend
+        )
+    t_batched = sp.duration_s
     if configs:
         # The first call pays one-time costs (routing-operator construction,
         # jit compilation on the jax backend); report the steady-state cost.
-        t0 = time.perf_counter()
-        simulate_batch(traffics, placements, params=params, num_iterations=iters, backend=backend)
-        t_batched = time.perf_counter() - t0
+        with span("sweep.simulate", cat="sweep", grid=grid.name, pass_="steady") as sp:
+            simulate_batch(traffics, placements, params=params, num_iterations=iters, backend=backend)
+        t_batched = sp.duration_s
     t_serial_loop = None
     if measure_serial and configs:
-        t0 = time.perf_counter()
-        simulate_serial(traffics, placements, params=params, num_iterations=iters)
-        t_serial_loop = time.perf_counter() - t0
+        with span("sweep.simulate_serial", cat="sweep", grid=grid.name) as sp:
+            simulate_serial(traffics, placements, params=params, num_iterations=iters)
+        t_serial_loop = sp.duration_s
         say(
             f"[sweep:{grid.name}] batched eval {t_batched*1e3:.1f} ms vs "
             f"serial loop {t_serial_loop*1e3:.1f} ms "
@@ -340,16 +355,16 @@ def run_sweep(
     if grid.contention and configs:
         from repro.nocsim import contention_sweep_payload
 
-        t0 = time.perf_counter()
-        contention = contention_sweep_payload(
-            configs,
-            traffics,
-            placements,
-            num_iterations=iters,
-            params=params,
-            buffer_depths=grid.buffer_depths,
-        )
-        t_contention = time.perf_counter() - t0
+        with span("sweep.nocsim", cat="sweep", grid=grid.name) as sp:
+            contention = contention_sweep_payload(
+                configs,
+                traffics,
+                placements,
+                num_iterations=iters,
+                params=params,
+                buffer_depths=grid.buffer_depths,
+            )
+        t_contention = sp.duration_s
         parity = contention.get("backend_parity_max_rel")
         say(
             f"[sweep:{grid.name}] contention: {len(contention['records'])} "
@@ -367,9 +382,9 @@ def run_sweep(
         "batched_eval_s": t_batched,
         "serial_eval_s": t_serial_loop,
         "contention_s": t_contention,
-        "total_s": time.perf_counter() - t_start,
+        "total_s": obs.now_s() - t_start,
     }
-    return SweepResult(
+    result = SweepResult(
         grid=grid,
         records=records,
         workload_stats=wl_stats,
@@ -380,6 +395,116 @@ def run_sweep(
         memory=memory,
         contention=contention,
     )
+    # ---- flight-recorder pass (opt-in; strictly after the payload) ---------
+    # Every byte-compared field (timings, memory, records) is already
+    # finalized above, so nothing the recorder replay allocates or times can
+    # leak into the artifact — the recording-on ≡ recording-off byte-identity
+    # contract rests on this ordering.
+    if recorder is not None and configs:
+        with span("sweep.nocsim_record", cat="sweep", grid=grid.name) as sp:
+            tracks = _record_noc_timelines(
+                recorder, configs, traffics, placements, topologies, iters, params
+            )
+            sp.annotate(configs_recorded=tracks)
+        say(
+            f"[sweep:{grid.name}] flight recorder: {tracks} routable config(s), "
+            f"{recorder.dropped_windows} window(s) dropped"
+        )
+    # Global registry feeds `--metrics-out`; the ATTACHED snapshot comes from
+    # a private registry so §Perf renders exactly this sweep's numbers even
+    # when several sweeps share a process (counters would otherwise
+    # accumulate across runs).
+    register_sweep_metrics(result)
+    metrics_snapshot_for(result)
+    return result
+
+
+def _record_noc_timelines(
+    recorder, configs, traffics, placements, topologies, iters, params
+) -> int:
+    """Replay every routable config through the windowed numpy stepper with
+    the flight recorder tapped in, once per routing arm.  Topologies without
+    per-link routing (no `route_operators`) are skipped — the replay needs
+    exact routes.  Returns the number of configs recorded."""
+    from repro.nocsim import NocSimParams
+    from repro.nocsim.batch import DEFAULT_WINDOW_CHUNK, contended_batch
+    from repro.nocsim.routes import ROUTING_POLICIES, route_operators
+
+    idx = [i for i, topo in enumerate(topologies) if route_operators(topo) is not None]
+    if not idx:
+        return 0
+    keys = [configs[i].key for i in idx]
+    sub_traffics = [traffics[i] for i in idx]
+    sub_placements = [placements[i] for i in idx]
+    sub_iters = np.asarray(iters)[idx]
+    for routing in ROUTING_POLICIES:
+        contended_batch(
+            sub_traffics,
+            sub_placements,
+            noc_params=NocSimParams(routing=routing, record_timeline=recorder),
+            params=params,
+            num_iterations=sub_iters,
+            backend="numpy",
+            config_keys=keys,
+            window_chunk=DEFAULT_WINDOW_CHUNK,
+        )
+    return len(idx)
+
+
+def register_sweep_metrics(result: SweepResult, reg=None) -> None:
+    """Absorb a sweep's ad-hoc stat dicts into the obs metrics registry.
+
+    Namespace placement is the determinism contract (`obs.metrics`):
+    wall-clock stage timings, peak RSS, and cache hit/miss/retry events are
+    `non_comparable`; placement descent statistics and the nocsim
+    saturation bound are pure functions of the inputs and land in
+    `comparable`."""
+    reg = reg if reg is not None else obs.metrics.get_registry()
+    gname = result.grid.name
+    stage = reg.gauge("sweep.stage_seconds", non_comparable=True)
+    for k, v in result.timings.items():
+        if v is not None:
+            stage.set(v, grid=gname, stage=k[:-2] if k.endswith("_s") else k)
+    mem = reg.gauge("sweep.peak_rss_mb", non_comparable=True)
+    for k, v in result.memory.items():
+        mem.set(v, grid=gname, stage=k[:-3] if k.endswith("_mb") else k)
+    cache_events = reg.counter("cache.events", non_comparable=True)
+    for k, v in result.cache_stats.items():
+        cache_events.inc(v, grid=gname, kind=k)
+    pl_stats = reg.gauge("placement.stats")
+    pl_seconds = reg.gauge("placement.seconds", non_comparable=True)
+    for k, v in result.placement_stats.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            continue
+        if k.endswith("_s"):
+            pl_seconds.set(float(v), grid=gname, stat=k[:-2])
+        else:
+            pl_stats.set(float(v), grid=gname, stat=k)
+    if result.contention is not None:
+        sat = reg.gauge("nocsim.saturation_bytes_per_s")
+        for rec in result.contention["records"]:
+            v = rec.get("saturation_bytes_per_s")
+            if v is not None:
+                sat.set(
+                    v,
+                    grid=gname,
+                    key=rec["key"],
+                    routing=rec["routing"],
+                    flow_control=rec.get("flow_control", "open"),
+                )
+
+
+def metrics_snapshot_for(result: SweepResult) -> dict:
+    """The sweep's metrics snapshot — the attached one when `run_sweep`
+    produced it, else built fresh into a private registry (deserialized or
+    hand-constructed results)."""
+    snap = result.metrics_snapshot
+    if snap is None:
+        reg = obs.metrics.MetricsRegistry()
+        register_sweep_metrics(result, reg)
+        snap = reg.snapshot()
+        result.metrics_snapshot = snap
+    return snap
 
 
 def figure_comparisons(records: list[SweepRecord]) -> list[dict]:

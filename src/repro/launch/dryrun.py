@@ -18,12 +18,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import time
 import traceback
 
 import jax
 
 from repro.configs.registry import ARCH_IDS, get_arch
+from repro.obs import span
 from repro.launch.mesh import make_production_mesh, mesh_devices
 from repro.launch.roofline import analyze_compiled, raw_costs
 
@@ -62,13 +62,14 @@ def run_cell(arch_id: str, cell: str, *, multi_pod: bool, verbose: bool = True,
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     chips = mesh_devices(mesh)
-    t0 = time.perf_counter()
     kw = {"cfg_transform": cfg_transform} if cfg_transform is not None else {}
-    case = arch.dryrun_case(cell, mesh, multi_pod=multi_pod, **kw)
-    lowered = case.lower(mesh)
-    t_lower = time.perf_counter() - t0
-    compiled = lowered.compile()
-    t_compile = time.perf_counter() - t0 - t_lower
+    with span("launch.lower", cat="launch", arch=arch_id, cell=cell) as sp:
+        case = arch.dryrun_case(cell, mesh, multi_pod=multi_pod, **kw)
+        lowered = case.lower(mesh)
+    t_lower = sp.duration_s
+    with span("launch.compile", cat="launch", arch=arch_id, cell=cell) as sp:
+        compiled = lowered.compile()
+    t_compile = sp.duration_s
     costs = None
     if arch.family == "lm":  # scanned over layers → needs the unroll correction
         costs = _scan_corrected_costs(arch, cell, mesh, multi_pod=multi_pod,

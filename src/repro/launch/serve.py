@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_arch
 from repro.models import transformer as tfm
+from repro.obs import span
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -78,9 +78,9 @@ def main():
     for i in range(args.requests):
         prompt = rng.integers(2, cfg.vocab, size=rng.integers(4, 17)).astype(np.int32)
         engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
-    t0 = time.perf_counter()
-    done = engine.run_until_drained()
-    dt = time.perf_counter() - t0
+    with span("serve.drain", cat="launch", requests=args.requests) as sp:
+        done = engine.run_until_drained()
+    dt = sp.duration_s
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, continuous batching over {args.slots} slots)")

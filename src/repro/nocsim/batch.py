@@ -28,11 +28,10 @@ attributable to the window recursion alone.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.analysis.registry import parity_pair
+from repro.obs import span
 from repro.core.placement import Placement
 from repro.core.simulator import SimParams
 from repro.core.traffic import TrafficMatrix
@@ -157,7 +156,8 @@ def open_step(backend: str):
     return _open_step_jax if backend == "jax" else _open_step_numpy
 
 
-def run_windows(step, xs: tuple, carry, *, window_chunk: int | None = None):
+def run_windows(step, xs: tuple, carry, *, window_chunk: int | None = None,
+                on_chunk=None):
     """THE window-carry driver, shared by every stepper arm (open, credit,
     degraded segments): run `step` over the window axis in chunks of
     `window_chunk`, threading the arm's carry state between chunks.
@@ -171,14 +171,26 @@ def run_windows(step, xs: tuple, carry, *, window_chunk: int | None = None):
     (regression-tested at the adversarial sizes 1, W−1, W).  Because the
     arms share this one code path, `window_chunk=` cannot diverge between
     them.  The stepper's working set (and the jax transfer/scan extent) is
-    bounded at O(chunk · state)."""
+    bounded at O(chunk · state).
+
+    `on_chunk(start_window, timelines)` is the flight-recorder tap: invoked
+    AFTER each chunk's recursion completes (once, at window 0, for the
+    unchunked path) with the chunk's materialized timelines.  It observes
+    outputs only — never the carry, never inside a scan body — so it cannot
+    perturb the recursion (RPL001) and sees identical data with any chunk
+    size."""
     w = xs[0].shape[0]
     if window_chunk is None:
-        return step(tuple(xs), carry)
+        tls, carry = step(tuple(xs), carry)
+        if on_chunk is not None:
+            on_chunk(0, tls)
+        return tls, carry
     chunk = max(1, int(window_chunk))
     parts = []
     for start in range(0, w, chunk):
         tls, carry = step(tuple(x[start : start + chunk] for x in xs), carry)
+        if on_chunk is not None:
+            on_chunk(start, tls)
         parts.append(tls)
     stitched = tuple(
         np.concatenate([p[i] for p in parts]) for i in range(len(parts[0]))
@@ -204,6 +216,7 @@ def contended_batch(
     backend: str = "auto",
     schedules: list[ConfigSchedule] | None = None,
     window_chunk: int | None = None,
+    config_keys: list[str] | None = None,
 ) -> list[NocSimResult]:
     """Batched contended simulation: one `NocSimResult` per (traffic,
     placement) pair, in input order.  All configs advance through one
@@ -216,7 +229,16 @@ def contended_batch(
     `noc_params.flow_control == "credit"` the closed-loop stepper
     (`nocsim.credit`) runs instead of the open-loop recursion; its
     effective backlog (per-link buffer + at-source holdback mapped over the
-    route) feeds the same `assemble_result` post-processing."""
+    route) feeds the same `assemble_result` post-processing.
+
+    When `noc_params` carries a flight recorder (constructed with
+    `NocSimParams(record_timeline=...)`) and the numpy reference backend
+    runs, the per-window normalized timelines stream into it: the open
+    loop taps `run_windows`' `on_chunk` boundary, the credit arm captures
+    its materialized timelines post-hoc — never the jax carry, never a
+    scan body (RPL001), and never the result values themselves, so
+    recording on vs off returns bit-identical `NocSimResult`s (tested).
+    `config_keys` names the recorder tracks (defaults to positional)."""
     if len(traffics) != len(placements):
         raise ValueError("traffics and placements must pair up")
     n_cfg = len(traffics)
@@ -229,12 +251,24 @@ def contended_batch(
             build_schedule(t, p, noc_params=noc_params, params=params)
             for t, p in zip(traffics, placements)
         ]
+    recorder = getattr(noc_params, "recorder", None)
+    if recorder is not None and backend != "numpy":
+        recorder = None  # record from the float64 reference arm only
     if noc_params.flow_control == "credit":
         from repro.nocsim.credit import build_credit_program, run_credit
 
         program = build_credit_program(schedules, noc_params)
         tl, _ = run_credit(program, backend=backend, window_chunk=window_chunk)
         serviced_tl, backlog_tl = tl.serviced, tl.eff_backlog
+        if recorder is not None:
+            recorder.capture_batch(
+                schedules,
+                serviced_tl,
+                backlog_tl,
+                start_window=0,
+                arm=f"{noc_params.routing}+credit(d={noc_params.buffer_depth:g})",
+                keys=config_keys,
+            )
     else:
         w = noc_params.windows
         l_max = max(s.inj.shape[1] for s in schedules)
@@ -242,8 +276,20 @@ def contended_batch(
         for c, s in enumerate(schedules):
             if s.cap_bytes > 0.0:
                 inj[:, c, : s.inj.shape[1]] = s.inj / s.cap_bytes
+        on_chunk = None
+        if recorder is not None:
+            def on_chunk(start, tls, _scheds=schedules):
+                recorder.capture_batch(
+                    _scheds,
+                    tls[0],
+                    tls[1],
+                    start_window=start,
+                    arm=noc_params.routing,
+                    keys=config_keys,
+                )
         serviced_tl, backlog_tl = run_windows(
-            open_step(backend), (inj,), None, window_chunk=window_chunk
+            open_step(backend), (inj,), None, window_chunk=window_chunk,
+            on_chunk=on_chunk,
         )[0]
     results = []
     for c, s in enumerate(schedules):
@@ -315,30 +361,30 @@ def contention_sweep_payload(
 
     def run_arm(arm_params, schedules, tag):
         nonlocal parity_max
-        t0 = time.perf_counter()
-        ref = contended_batch(
-            traffics,
-            placements,
-            noc_params=arm_params,
-            params=params,
-            num_iterations=iters,
-            backend="numpy",
-            schedules=schedules,
-        )
-        timings[f"{tag}_numpy_s"] = time.perf_counter() - t0
-        acc = None
-        if have_jax:
-            t0 = time.perf_counter()
-            acc = contended_batch(
+        with span(f"nocsim.{tag}.numpy", cat="nocsim", configs=n_cfg) as sp:
+            ref = contended_batch(
                 traffics,
                 placements,
                 noc_params=arm_params,
                 params=params,
                 num_iterations=iters,
-                backend="jax",
+                backend="numpy",
                 schedules=schedules,
             )
-            timings[f"{tag}_jax_s"] = time.perf_counter() - t0
+        timings[f"{tag}_numpy_s"] = sp.duration_s
+        acc = None
+        if have_jax:
+            with span(f"nocsim.{tag}.jax", cat="nocsim", configs=n_cfg) as sp:
+                acc = contended_batch(
+                    traffics,
+                    placements,
+                    noc_params=arm_params,
+                    params=params,
+                    num_iterations=iters,
+                    backend="jax",
+                    schedules=schedules,
+                )
+            timings[f"{tag}_jax_s"] = sp.duration_s
             for r_np, r_jx in zip(ref, acc):
                 denom = max(abs(r_np.t_network_contended_s), 1e-300)
                 parity_max = max(

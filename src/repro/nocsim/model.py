@@ -106,8 +106,14 @@ class NocSimParams:
     # Per-link buffer depth in units of one window's service (credit arm
     # only).  inf recovers the open-loop arm bit-for-bit (tested contract).
     buffer_depth: float = float("inf")
+    # Opt-in flight recorder (`repro.obs.FlightRecorder`).  An InitVar, not
+    # a field: `dataclasses.asdict(params)` lands verbatim in byte-compared
+    # sweep payloads, so the recorder must be invisible to serialization,
+    # equality, and `replace()` (which drops it — recording passes construct
+    # their params explicitly).  Stored as the non-field `recorder` attr.
+    record_timeline: dataclasses.InitVar[object | None] = None
 
-    def __post_init__(self):
+    def __post_init__(self, record_timeline):
         if self.windows < 1:
             raise ValueError("windows must be >= 1")
         if self.profile not in ("phases", "uniform", "burst"):
@@ -125,6 +131,7 @@ class NocSimParams:
             raise ValueError("burst_frac must be in (0, 1]")
         if not (0.0 < self.latency_q <= 1.0):
             raise ValueError("latency_q must be in (0, 1]")
+        object.__setattr__(self, "recorder", record_timeline)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,12 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import signal
-import time
 import typing
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.train import optim as optim_lib
 from repro.train.checkpoint import Checkpointer, latest_step, restore_checkpoint
 
@@ -126,7 +126,11 @@ class TrainLoop:
             )
             self.log_fn(f"[resume] restored step {step}")
         flag = _PreemptionFlag()
-        t0 = time.perf_counter()
+        # Step timing goes through obs (the tree's one timing idiom): the
+        # logged ms/step also lands in the `train.step_ms` histogram, so
+        # `--metrics-out`-style snapshots see it without parsing log lines.
+        step_ms = obs.metrics.get_registry().histogram("train.step_ms", non_comparable=True)
+        t0 = obs.now_s()
         start = int(state.step)
         for batch in batches:
             if int(state.step) >= num_steps:
@@ -134,7 +138,8 @@ class TrainLoop:
             state, metrics = self.step_fn(state, batch)
             s = int(metrics["step"])
             if s % self.log_every == 0:
-                dt = (time.perf_counter() - t0) / max(s - start + 1, 1)
+                dt = (obs.now_s() - t0) / max(s - start + 1, 1)
+                step_ms.observe(dt * 1e3)
                 self.log_fn(f"[step {s}] loss={float(metrics['loss']):.4f} {dt*1e3:.1f} ms/step")
             if ckpt is not None:
                 ckpt.maybe_save(int(state.step), state.tree())

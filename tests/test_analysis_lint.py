@@ -319,7 +319,10 @@ class TestWallClockPayload:
         flagged = lint_snippet(tmp_path / "b", src, "repro/experiments/journal.py")
         assert rules_fired(flagged) == {"RPL005"}
 
-    def test_perf_counter_durations_are_fine_in_payload_modules(self, tmp_path):
+    def test_perf_counter_durations_do_not_trip_wall_clock_payload_rule(self, tmp_path):
+        # Durations never reach payloads, so RPL005 stays quiet — but raw
+        # clock reads outside repro/obs/ now go through the obs layer
+        # (RPL009), which is the only rule that should fire here.
         findings = lint_snippet(tmp_path, """
             import time
 
@@ -327,6 +330,54 @@ class TestWallClockPayload:
                 t0 = time.perf_counter()
                 out = fn()
                 return out, time.perf_counter() - t0
+        """, "repro/experiments/cache.py")
+        assert rules_fired(findings) == {"RPL009"}
+
+
+# ---------------------------------------------------------------------------
+# RPL009 — raw clock reads outside repro/obs/
+# ---------------------------------------------------------------------------
+
+
+class TestTimingIdiom:
+    def test_raw_monotonic_read_flagged(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import time
+
+            def stamp():
+                return time.monotonic_ns()
+        """, "repro/experiments/sweep.py")
+        assert rules_fired(findings) == {"RPL009"}
+        assert any("RPL009" == f.rule and f.line == 5 for f in findings)
+
+    def test_obs_package_may_read_clocks(self, tmp_path):
+        # repro/obs/ is the one place raw clocks are allowed — it IS the
+        # timing layer the rest of the tree is routed through.
+        findings = lint_snippet(tmp_path, """
+            import time
+
+            def now_ns():
+                return time.perf_counter_ns()
+        """, "repro/obs/trace.py")
+        assert findings == []
+
+    def test_obs_routed_timing_is_compliant(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            from repro import obs
+
+            def timed(fn):
+                with obs.span("stage") as sp:
+                    out = fn()
+                return out, sp.duration_s
+        """, "repro/experiments/sweep.py")
+        assert findings == []
+
+    def test_time_sleep_is_not_a_clock_read(self, tmp_path):
+        findings = lint_snippet(tmp_path, """
+            import time
+
+            def backoff(attempt):
+                time.sleep(0.01 * attempt)
         """, "repro/experiments/cache.py")
         assert findings == []
 
@@ -625,7 +676,7 @@ class TestRealTree:
 
     def test_every_rule_has_id_and_title(self):
         catalog = rule_catalog()
-        assert len(catalog) == len(ALL_RULES) == 8
+        assert len(catalog) == len(ALL_RULES) == 9
         assert all(rid.startswith("RPL") for rid in catalog)
 
     def test_deleting_a_parity_pair_decorator_trips_rpl006(self, tmp_path):
